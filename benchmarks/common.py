@@ -1,0 +1,53 @@
+"""Shared benchmark plumbing: result container + CSV/markdown emit."""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, List, Mapping, Sequence
+
+
+@dataclasses.dataclass
+class BenchResult:
+    name: str                      # e.g. "tab3_latency"
+    paper_ref: str                 # e.g. "Table III"
+    markdown: str
+    csv_rows: List[str] = dataclasses.field(default_factory=list)
+    notes: str = ""
+
+
+def csv(name: str, **fields: Any) -> str:
+    cells = ",".join(f"{k}={_fmt(v)}" for k, v in fields.items())
+    return f"{name},{cells}"
+
+
+def _fmt(x: Any) -> str:
+    if isinstance(x, float):
+        if x == 0:
+            return "0"
+        if abs(x) >= 1e5 or abs(x) < 1e-3:
+            return f"{x:.4e}"
+        return f"{x:.4f}"
+    return str(x)
+
+
+def table(headers: Sequence[str], rows: Sequence[Sequence[Any]]) -> str:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(_fmt(c) for c in r) + " |")
+    return "\n".join(out) + "\n"
+
+
+def write_report(results: Sequence[BenchResult],
+                 path: str = "results/characterization.md") -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write("# Characterization report (paper-table analogues)\n\n"
+                "Backend: CPU container (methodology validation); "
+                "TPU v5e numbers are model-derived where flagged.\n\n")
+        for r in results:
+            f.write(f"## {r.name} — {r.paper_ref}\n\n")
+            if r.notes:
+                f.write(r.notes.strip() + "\n\n")
+            f.write(r.markdown.strip() + "\n\n")

@@ -1,0 +1,72 @@
+"""Paper §VI (Fig 6-10): memory-hierarchy walk, stride sensitivity,
+concurrency scaling, streaming bandwidth — on this backend the probes walk
+the host cache hierarchy (methodology validation); the v5e column is the
+published HBM/VMEM model the roofline uses."""
+
+from __future__ import annotations
+
+from benchmarks.common import BenchResult, csv, table
+from repro.core import TPU_V5E, detect_backend_model
+from repro.core.probes import memory
+
+
+def run(quick: bool = False) -> BenchResult:
+    iters = 3 if quick else 5
+    csv_rows = []
+
+    # Fig 6: pointer-chase hierarchy walk
+    sizes = tuple(1 << p for p in (14, 17, 20, 23, 26)) if quick else \
+        tuple(1 << p for p in range(13, 28))
+    curve = memory.chase_curve(sizes=sizes, steps=1 << 12 if quick
+                               else 1 << 14, iters=iters)
+    rows = [[f"{p.working_set_bytes/1024:.0f} KiB", p.ns_per_load,
+             p.cycles_per_load] for p in curve]
+    for p in curve:
+        csv_rows.append(csv("fig6_chase", size_bytes=p.working_set_bytes,
+                            ns_per_load=p.ns_per_load))
+    md = "**Fig 6 — pointer-chase latency**\n\n" + table(
+        ["working set", "ns/load", "cycles/load"], rows)
+    bounds = memory.find_boundaries(curve)
+    md += (f"\nDetected hierarchy boundaries at {bounds} bytes "
+           f"(host caches; the paper finds L1 end ~128/256 KB, L2 end "
+           f"~30/60 MB).  On v5e the analogous boundary is "
+           f"VMEM={TPU_V5E.level('vmem').capacity_bytes >> 20} MiB -> "
+           f"HBM.\n")
+    for b in bounds:
+        csv_rows.append(csv("fig6_chase", boundary_bytes=b))
+
+    # Fig 7/8: stride sweep
+    spts = memory.stride_sweep(iters=iters)
+    srows = [[p.stride, p.concurrency, p.ns_per_access] for p in spts]
+    for p in spts:
+        csv_rows.append(csv("fig7_8_stride", stride=p.stride,
+                            lanes=p.concurrency,
+                            ns_per_access=p.ns_per_access))
+    md += "\n**Fig 7/8 — stride x concurrency**\n\n" + table(
+        ["stride", "lanes (warp analogue)", "ns/access"], srows)
+
+    # Fig 9: concurrency scaling
+    cpts = memory.concurrency_scaling(iters=iters)
+    peak1 = cpts[0].aggregate_gbps
+    crows = [[p.streams, p.aggregate_gbps, p.aggregate_gbps / peak1]
+             for p in cpts]
+    for p in cpts:
+        csv_rows.append(csv("fig9_concurrency", streams=p.streams,
+                            gbps=p.aggregate_gbps))
+    md += "\n**Fig 9 — concurrency scaling**\n\n" + table(
+        ["streams", "GB/s", "scaling vs 1 stream"], crows)
+
+    # Fig 10: streaming bandwidth
+    bw = memory.stream_bandwidth(iters=iters)
+    brows = [[r.mode, r.gbps] for r in bw]
+    for r in bw:
+        csv_rows.append(csv("fig10_bandwidth", kind=r.mode, gbps=r.gbps))
+    reads = {r.mode: r.gbps for r in bw}
+    md += "\n**Fig 10 — streaming bandwidth**\n\n" + table(
+        ["kind", "GB/s"], brows)
+    if "read" in reads and "write" in reads:
+        md += (f"\nread/write ratio {reads['read']/reads['write']:.2f} "
+               f"(paper: GH100 7.2x, GB203 5.1x — read-optimized memory "
+               f"paths; v5e HBM {TPU_V5E.hbm.bandwidth_Bps/1e9:.0f} GB/s "
+               f"is symmetric).\n")
+    return BenchResult("fig6_10_memory", "Figures 6-10", md, csv_rows)

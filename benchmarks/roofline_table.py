@@ -1,0 +1,79 @@
+"""§Roofline: render the full (arch x shape x mesh) baseline table from the
+dry-run JSONs (results/dryrun/*.json).
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import BenchResult, csv, table
+
+HBM_GIB = 16.0
+
+
+def load_rows(dirname: str = "results/dryrun") -> List[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def render(rows: List[dict]) -> BenchResult:
+    trows, csv_rows = [], []
+    for d in rows:
+        r = d["roofline"]
+        mem = d["memory"]
+        live_gib = (mem["argument_bytes"] + mem["temp_bytes"]) / 2**30
+        fits = "yes" if live_gib <= HBM_GIB else f"NO ({live_gib:.0f}G)"
+        trows.append([
+            f"{d['arch']}/{d['shape']}/{d['mesh']}",
+            f"{d['flops_per_device']:.2e}",
+            f"{d['bytes_per_device']:.2e}",
+            f"{d['collective_bytes']:.2e}",
+            r["compute_s"] * 1e3, r["memory_s"] * 1e3,
+            r["collective_s"] * 1e3,
+            f"**{r['dominant']}**",
+            r["useful_ratio"], r["mfu"], fits,
+        ])
+        csv_rows.append(csv(
+            "roofline", cell=f"{d['arch']}/{d['shape']}/{d['mesh']}",
+            compute_ms=r["compute_s"] * 1e3,
+            memory_ms=r["memory_s"] * 1e3,
+            collective_ms=r["collective_s"] * 1e3,
+            dominant=r["dominant"], mfu=r["mfu"],
+            useful=r["useful_ratio"], live_gib=live_gib))
+    md = table(
+        ["cell", "FLOPs/dev", "bytes/dev", "coll B/dev", "compute ms",
+         "memory ms", "coll ms", "dominant", "useful", "MFU@bound",
+         "fits 16G"],
+        trows)
+    return BenchResult("roofline_table", "§Roofline (from dry-run)", md,
+                       csv_rows)
+
+
+def run(quick: bool = False) -> BenchResult:
+    rows = load_rows()
+    if not rows:
+        return BenchResult(
+            "roofline_table", "§Roofline",
+            "(no dry-run JSONs found — run "
+            "`python -m repro.launch.dryrun --all` first)\n", [])
+    return render(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    res = render(load_rows(args.dir))
+    print(res.markdown)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only tab3_latency]
+
+Prints ``name,key=value,...`` CSV lines per measurement and writes the
+markdown report to results/characterization.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import write_report
+
+MODULES = [
+    "tab3_latency",
+    "fig2_3_ilp",
+    "tab4_5_precision",
+    "tab6_energy",
+    "fig4_5_matmul",
+    "fig6_10_memory",
+    "tab7_gemm",
+    "tab8_inference",
+    "collectives_bench",
+    "roofline_table",
+    "paper_claims",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small iteration counts (CI mode)")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--report", default="results/characterization.md")
+    args = ap.parse_args()
+
+    results = []
+    failures = []
+    for name in MODULES:
+        if args.only and name != args.only:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            res = mod.run(quick=args.quick)
+        except Exception as e:                     # pragma: no cover
+            failures.append((name, repr(e)))
+            print(f"bench,{name},status=FAIL,error={e!r}",
+                  file=sys.stderr)
+            continue
+        dt = time.time() - t0
+        print(f"bench,{name},paper_ref={res.paper_ref!r},"
+              f"wall_s={dt:.1f}")
+        for row in res.csv_rows:
+            print(row)
+        results.append(res)
+
+    if results:
+        write_report(results, args.report)
+        print(f"bench,report,path={args.report}")
+    if failures:
+        print(f"bench,failures,n={len(failures)}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Table III: true/completion latency per execution-unit workload
+(pure INT32, pure FP32, mixed, FP64) — measured on this backend via the
+dependency-chain probes, with the paper's GB203/GH100 columns alongside."""
+
+from __future__ import annotations
+
+from benchmarks.common import BenchResult, csv, table
+from repro.core import detect_backend_model
+from repro.core.probes import compute
+
+# Paper Tab III (cycles, true/completion)
+PAPER = {
+    "int32": {"GB203": (4, 16.97), "GH100": (4, 16.69)},
+    "fp32": {"GB203": (4, 7.97), "GH100": (4, 7.86)},
+    "mixed1": {"GB203": (15.96, 14), "GH100": (31.62, 16)},
+    "mixed2": {"GB203": (26.28, 18), "GH100": (43.54, 20)},
+    "fp64": {"GB203": (63.57, 11), "GH100": (8.04, 13)},
+}
+
+
+def run(quick: bool = False) -> BenchResult:
+    dev = detect_backend_model()
+    iters = 5 if quick else 20
+    results = compute.latency_table(iters=iters)
+    rows, csv_rows = [], []
+    for r in results:
+        paper = PAPER.get(r.workload, {})
+        rows.append([
+            r.workload, r.support,
+            r.true_cycles, r.completion_cycles,
+            f"{paper.get('GB203', ('-', '-'))[0]}/{paper.get('GB203', ('-', '-'))[1]}",
+            f"{paper.get('GH100', ('-', '-'))[0]}/{paper.get('GH100', ('-', '-'))[1]}",
+        ])
+        csv_rows.append(csv(
+            "tab3_latency", workload=r.workload,
+            true_ns=r.true_ns, completion_ns=r.completion_ns,
+            true_cycles=r.true_cycles,
+            completion_cycles=r.completion_cycles))
+    emu = compute.fp64_emulation_factor(iters=iters)
+    csv_rows.append(csv("tab3_latency", workload="fp64_emulation_factor",
+                        factor=emu))
+    md = table(
+        ["workload", "support", f"{dev.name} true (cyc)",
+         "completion (cyc)", "GB203 paper (t/c)", "GH100 paper (t/c)"],
+        rows)
+    md += (f"\nfp64/fp32 completion factor on {dev.name}: **{emu:.2f}x** "
+           f"(paper GB203: ~16x true-latency penalty from 2 FP64 units/SM; "
+           f"TPU has 0 FP64 units — the paper's 'FP64 is for type support, "
+           f"compute is meant to be emulated' is the design point here).\n")
+    return BenchResult("tab3_latency", "Table III", md, csv_rows)

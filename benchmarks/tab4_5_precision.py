@@ -1,0 +1,47 @@
+"""Paper Tables IV/V: the datatype support matrix + which pipeline each
+format actually lowers to — our compiled-HLO inspection is the SASS
+(QMMA/OMMA/HMMA) analogue."""
+
+from __future__ import annotations
+
+from benchmarks.common import BenchResult, csv, table
+from repro.core.probes import precision
+
+# Paper Tab IV/V ground truth for the two GPUs
+PAPER_PIPELINE = {
+    "e2m1": "GB203: QMMA (OMMA only w/ ue8m0 scales); GH100: unsupported",
+    "e2m3": "GB203: QMMA; GH100: unsupported",
+    "e3m2": "GB203: QMMA; GH100: unsupported",
+    "e4m3": "GB203: QMMA; GH100: HMMA",
+    "e5m2": "GB203: QMMA; GH100: HMMA",
+    "e8m0": "scale-exponent only (not an mma input)",
+}
+
+
+def run(quick: bool = False) -> BenchResult:
+    sup = precision.support_matrix()
+    rows, csv_rows = [], []
+    for s in sup:
+        rows.append([s.fmt, s.bits, s.max_finite,
+                     "yes" if s.representable else "no",
+                     s.pipeline, PAPER_PIPELINE.get(s.fmt, "-")])
+        csv_rows.append(csv("tab4_5_precision", fmt=s.fmt, bits=s.bits,
+                            representable=int(s.representable),
+                            native_dot=int(s.native_dot),
+                            via_convert=int(s.lowers_via_convert)))
+    md = table(["format", "bits", "max", "representable",
+                "this backend lowers via", "paper (SASS)"], rows)
+    md += ("\nEvery sub-bf16 format rides the wide pipeline after a "
+           "convert — the same fallback the paper catches for FP4 "
+           "(QMMA instead of OMMA). e8m0 is used only as the block-scale "
+           "exponent, as in Tab V.\n")
+    # cast-error staircase (Tab V numerics)
+    err_rows = []
+    for fmt in ("e4m3", "e5m2", "e2m3", "e3m2", "e2m1"):
+        e = precision.cast_error(fmt)
+        err_rows.append([fmt, e.rel_err_mean, e.rel_err_max])
+        csv_rows.append(csv("tab4_5_precision_err", fmt=fmt,
+                            rms_rel=e.rel_err_mean, max_rel=e.rel_err_max))
+    md += "\n**Cast error (rel)**\n\n" + table(
+        ["format", "rms", "max"], err_rows)
+    return BenchResult("tab4_5_precision", "Tables IV and V", md, csv_rows)

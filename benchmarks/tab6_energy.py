@@ -1,0 +1,52 @@
+"""Paper Table VI: power per mma data format.
+
+No power telemetry exists on CPU/TPU-Pallas, so the energy model
+(repro.core.energy, constants documented there) reproduces the paper's
+*ordering* — FP4 16.75 W < FP6 39.4/46.7 W < FP8 46.7/46.8 W on GB203 —
+as model output for an iso-work sustained-mma loop, for GB203 (sanity
+check against the paper's absolute watts) and TPU v5e (the target)."""
+
+from __future__ import annotations
+
+from benchmarks.common import BenchResult, csv, table
+from repro.core import GB203, TPU_V5E
+from repro.core.energy import estimate
+
+PAPER_WATTS = {"float4_e2m1fn": 16.753, "float6_e2m3fn": 39.383,
+               "float6_e3m2fn": 46.723, "float8_e4m3fn": 46.661,
+               "float8_e5m2": 46.806}
+
+FORMATS = ("float4_e2m1fn", "float6_e2m3fn", "float6_e3m2fn",
+           "float8_e4m3fn", "float8_e5m2", "bfloat16")
+
+
+def run(quick: bool = False) -> BenchResult:
+    rows, csv_rows = [], []
+    # iso-work loop: sustained mma at each format's native rate
+    for fmt in FORMATS:
+        est_gb = estimate(
+            GB203, flops=GB203.peak_flops_for(fmt) * 0.35, dtype=fmt,
+            bytes_by_level={"l1": 2e12}, seconds=1.0)
+        est_tpu = estimate(
+            TPU_V5E, flops=TPU_V5E.peak_flops_for(fmt) * 0.35, dtype=fmt,
+            bytes_by_level={"vmem": 2e12}, seconds=1.0)
+        rows.append([fmt, est_gb.total_watts, PAPER_WATTS.get(fmt, "-"),
+                     est_tpu.total_watts,
+                     est_tpu.perf_per_watt / 1e9])
+        csv_rows.append(csv("tab6_energy", fmt=fmt,
+                            model_watts_gb203=est_gb.total_watts,
+                            paper_watts=PAPER_WATTS.get(fmt, 0.0),
+                            model_watts_v5e=est_tpu.total_watts,
+                            gflops_per_watt_v5e=est_tpu.perf_per_watt / 1e9))
+    md = table(["format", "GB203 model (W)", "GB203 paper (W)",
+                "v5e model (W)", "v5e GFLOP/s/W"], rows)
+    # the reproducible claim is the ORDERING
+    watts = [r[1] for r in rows[:5]]
+    ordered = all(watts[i] <= watts[i + 1] + 1e-9
+                  for i in range(len(watts) - 1))
+    md += (f"\nOrdering FP4 < FP6 <= FP8 reproduced: **{ordered}** "
+           f"(paper Tab VI; v5e runs every format on the bf16 MXU, so its "
+           f"energy differences come only from storage traffic — the "
+           f"quantified cost of missing low-precision pipelines).\n")
+    csv_rows.append(csv("tab6_energy", fmt="ordering_ok", ok=int(ordered)))
+    return BenchResult("tab6_energy", "Table VI", md, csv_rows)

@@ -1,0 +1,73 @@
+"""Paper §VII.B (Tab VIII): transformer-inference power across precisions.
+
+The paper serves GPT-NeoX via TensorRT at FP32/FP16/FP8/best and reads
+wall power.  Here: the gptneox-1b config runs through OUR serving stack
+(weight-only block-quantized at each precision), wall-time measured on
+this backend; per-step energy on v5e comes from the model (2*N_active
+flops + quantized weight reads)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import BenchResult, csv, table
+from repro.configs import get_config
+from repro.core import TPU_V5E
+from repro.core.energy import estimate
+from repro.models import build_model
+from repro.serve import ServeEngine, quantize_params
+
+PAPER_WATTS = {"float32": (60.24, 58.82), "float16": (57.64, 47.78),
+               "float8_e4m3fn": (57.69, 45.14)}
+
+PRECISIONS = ("float32", "bfloat16", "float8_e4m3fn", "float4_e2m1fn")
+
+
+def run(quick: bool = False) -> BenchResult:
+    cfg = get_config("gptneox-1b").reduced()
+    model = build_model(cfg)
+    base_params = model.init(jax.random.PRNGKey(0))
+    n_req, new_toks = (4, 4) if quick else (8, 8)
+    rows, csv_rows = [], []
+    for fmt in PRECISIONS:
+        params, qstats = quantize_params(base_params, fmt)
+        eng = ServeEngine(model, params, batch=4, max_seq=64)
+        for i in range(n_req):
+            eng.submit([1 + i, 2, 3, 4, 5, 6, 7, 8],
+                       max_new_tokens=new_toks)
+        t0 = time.perf_counter()
+        results = eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.tokens) for r in results)
+        # v5e per-token energy: 2*N flops + quantized weight reads
+        full = get_config("gptneox-1b")
+        n_active = full.active_param_count()
+        weight_frac = qstats["quantized_bytes"] / max(
+            sum(x.nbytes for x in jax.tree.leaves(base_params)), 1)
+        hbm_bytes = n_active * 2 * weight_frac     # bf16 baseline scaled
+        est = estimate(TPU_V5E, flops=2.0 * n_active, dtype=fmt,
+                       bytes_by_level={"hbm": hbm_bytes},
+                       seconds=max(hbm_bytes / TPU_V5E.hbm.bandwidth_Bps,
+                                   1e-9))
+        paper = PAPER_WATTS.get(fmt)
+        rows.append([fmt, toks / dt, qstats["mse"],
+                     est.total_watts,
+                     f"{paper[0]}/{paper[1]}" if paper else "-"])
+        csv_rows.append(csv("tab8_inference", precision=fmt,
+                            tok_per_s_cpu=toks / dt,
+                            quant_rel_mse=qstats["mse"],
+                            model_watts_v5e=est.total_watts))
+    md = table(["precision", "tok/s (cpu, reduced)", "quant rel-MSE",
+                "v5e model W/step", "paper H100/5080 W"], rows)
+    watts = [r[3] for r in rows]
+    md += (f"\nModeled decode power decreases with precision "
+           f"({watts[0]:.0f} -> {watts[-1]:.0f} W) — the paper's Tab VIII "
+           f"trend (Blackwell 58.8 -> 45.1 W from FP32 to FP8), here "
+           f"driven purely by HBM traffic since v5e computes in bf16 "
+           f"either way.  Decode is memory-bound, so weight-only "
+           f"quantization is the whole win.\n")
+    ok = watts[0] >= watts[-2] >= watts[-1] - 1e-9
+    csv_rows.append(csv("tab8_inference", precision="trend_ok", ok=int(ok)))
+    return BenchResult("tab8_inference", "Table VIII", md, csv_rows)

@@ -1,0 +1,50 @@
+"""Run the microbenchmark probe suite (the paper's methodology) against
+THIS backend and print the characterization tables — §IV latency, §V
+matmul/precision, §VI memory hierarchy.
+
+    PYTHONPATH=src python examples/characterize.py
+"""
+
+from repro.core import detect_backend_model
+from repro.core.probes import compute, matmul, memory, precision
+from repro.core.report import dataclass_table
+
+
+def main() -> None:
+    dev = detect_backend_model()
+    print(f"backend device model: {dev.name} "
+          f"(clock {dev.clock_hz/1e9:.2f} GHz)\n")
+
+    print("== §IV execution-pipeline latency (Tab III analogue) ==")
+    rows = compute.latency_table(iters=8)
+    print(dataclass_table(rows, ["workload", "support", "true_cycles",
+                                 "completion_cycles"]))
+
+    print("== §IV.C fp64 emulation factor ==")
+    print(f"fp64/fp32 = {compute.fp64_emulation_factor(iters=8):.2f}x\n")
+
+    print("== §V matmul saturation (Fig 4/5 analogue) ==")
+    pts = matmul.warp_ilp_sweep(batches=(1, 4, 16), ilps=(1, 2, 4),
+                                iters=4)
+    sat = matmul.saturation_point(pts)
+    print(f"saturates at tiles={sat.batch} ilp={sat.ilp} "
+          f"({sat.tflops:.2f} TFLOP/s)\n")
+
+    print("== §V.A precision support matrix (Tab IV/V analogue) ==")
+    print(dataclass_table(precision.support_matrix(),
+                          ["fmt", "bits", "representable", "pipeline"]))
+
+    print("== §VI.A memory hierarchy walk (Fig 6 analogue) ==")
+    curve = memory.chase_curve(
+        sizes=tuple(1 << p for p in range(14, 27, 2)), steps=1 << 13,
+        iters=4)
+    print(dataclass_table(curve))
+    bounds = memory.find_boundaries(curve)
+    print(f"hierarchy boundaries near: {bounds} bytes\n")
+
+    print("== §VI.D streaming bandwidth (Fig 10 analogue) ==")
+    print(dataclass_table(memory.stream_bandwidth(iters=4)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: train a tiny qwen-family model on the synthetic affine task,
+checkpoint it, and serve a few generations — the whole stack in ~1 minute
+on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.configs import get_config, smoke_shape
+from repro.data import make_stream
+from repro.models import build_model
+from repro.optim import AdamWConfig, Schedule
+from repro.serve import ServeEngine
+from repro.train import (TrainLoopConfig, make_train_step, run_train_loop,
+                         train_state_init)
+
+
+def main() -> None:
+    cfg = dataclasses.replace(get_config("qwen2.5-3b").reduced(),
+                              n_layers=2)
+    model = build_model(cfg)
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.2f}M params)")
+
+    opt = AdamWConfig(schedule=Schedule(peak_lr=1e-2, warmup_steps=5,
+                                        decay_steps=100))
+    state = train_state_init(model, opt, jax.random.PRNGKey(0))
+    stream = make_stream(cfg, smoke_shape("train"))
+    step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        state, history = run_train_loop(
+            step, state, stream,
+            TrainLoopConfig(total_steps=60, checkpoint_every=30,
+                            checkpoint_dir=ckdir, log_every=10))
+
+    print("\nserving the trained model (greedy):")
+    engine = ServeEngine(model, state["params"], batch=2, max_seq=96)
+    # the affine task: t_{i+1} = (5 t_i + 17) mod 97 — the model should
+    # continue the chain
+    prompt = [3]
+    x = 3
+    for _ in range(15):
+        x = (5 * x + 17) % 97
+        prompt.append(x)
+    engine.submit(prompt, max_new_tokens=8)
+    result = engine.run()[0]
+    want = []
+    for _ in range(8):
+        x = (5 * x + 17) % 97
+        want.append(x)
+    print(f"  prompt tail : {prompt[-4:]}")
+    print(f"  generated   : {result.tokens}")
+    print(f"  ground truth: {want}")
+    hits = sum(int(a == b) for a, b in zip(result.tokens, want))
+    print(f"  -> {hits}/8 continuations correct")
+
+
+if __name__ == "__main__":
+    main()

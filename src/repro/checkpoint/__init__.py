@@ -1,0 +1,7 @@
+"""Checkpointing: sharded-logical save/restore with elastic re-mesh."""
+
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    Checkpointer,
+    load_tree,
+    save_tree,
+)

@@ -1,0 +1,33 @@
+"""gemma2-2b — local/global alternating attention + logit softcaps
+[arXiv:2408.00118].
+
+26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000.  head_dim=256.
+Even layers: sliding window 4096; odd layers: global.  Attention logits
+softcapped at 50, final logits at 30.  GeGLU MLP.
+
+``long_500k`` RUNS: half the layers are window-bounded (KV <= 4096); the
+global layers keep full 500k KV and dominate the memory term — recorded in
+the roofline table.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma2-2b",
+    family="dense",
+    n_layers=26,
+    d_model=2304,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256000,
+    mlp_variant="geglu",
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    sliding_window=4096,
+    local_global_period=2,
+    tie_embeddings=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

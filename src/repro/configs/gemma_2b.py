@@ -1,0 +1,23 @@
+"""gemma-2b — MQA (kv=1) GeGLU transformer, head_dim=256 [arXiv:2403.08295].
+
+18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=256000.
+Pure full attention => ``long_500k`` SKIPPED.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    mlp_variant="geglu",
+    tie_embeddings=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,25 @@
+"""gptneox-1b — GPT-NeoX-family config for the paper's §VII.B case study.
+
+The paper runs GPT-NeoX through TensorRT at FP32/FP16/FP8 and reports
+power per precision (Tab VIII).  This config is the serving-stack subject
+for our Tab VIII analogue (benchmarks.tab8_inference): a ~1B NeoX-shaped
+model (16L d_model=2048 16H MHA d_ff=8192 vocab=50432).  Not part of the
+assigned 10-arch pool; exists for the paper-claims validation.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gptneox-1b",
+    family="dense",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=50432,
+    mlp_variant="gelu",
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,26 @@
+"""internvl2-2b — InternViT + InternLM2 VLM [arXiv:2404.16821].
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553.  head_dim=128.
+The InternViT vision frontend is a STUB: ``input_specs()`` provides
+precomputed patch embeddings (batch, n_patches, d_model) that are
+prepended to the token embeddings (early fusion into the LM trunk).
+``long_500k`` SKIPPED (full attention).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92553,
+    mlp_variant="swiglu",
+    frontend="vision",
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

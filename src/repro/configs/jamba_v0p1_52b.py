@@ -1,0 +1,40 @@
+"""jamba-v0.1-52b — hybrid Mamba + attention 7:1 interleave with MoE
+[arXiv:2403.19887].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536, MoE 16e top-2.
+Period-8 pattern: attention block at position 0, SSM blocks at 1..7; MoE
+FFN every 2nd block.  Jamba v0.1 uses Mamba-1 (d_state=16); we implement
+the mixer with our Mamba-2 SSD block at d_state=16 (DESIGN.md §5 notes the
+substitution — SSD at n=16 is numerically the same state size with a
+chunk-parallel form).  ``long_500k`` RUNS (4 attention layers hold full KV;
+28 SSM layers carry O(1) state).
+
+fsdp=True: 52B params exceed single-axis TP capacity at 16 GiB/chip.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    mlp_variant="swiglu",
+    moe_num_experts=16,
+    moe_top_k=2,
+    moe_every=2,
+    attn_every=8,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv=4,
+    ssm_chunk=256,
+    fsdp=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

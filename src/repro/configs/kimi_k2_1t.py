@@ -1,0 +1,35 @@
+"""kimi-k2-1t-a32b — trillion-parameter MoE (paper-table config)
+[arXiv:2501.kimi2].
+
+61L d_model=7168 64H (GQA kv=8) per-expert d_ff=2048 vocab=163840,
+MoE 384 experts top-8 + 1 shared expert on every layer.  head_dim=128
+(q_dim = 64*128 = 8192 > d_model, as in the DeepSeek-family lineage).
+
+Exercises EP + FSDP hardest: ~1.04e12 total params, ~32e9 active.
+fsdp=True is mandatory — at bf16 the expert stack alone is ~2 TB.
+``long_500k`` SKIPPED (full attention).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=2048,
+    vocab_size=163840,
+    mlp_variant="swiglu",
+    moe_num_experts=384,
+    moe_top_k=8,
+    moe_every=1,
+    moe_d_ff=2048,
+    moe_shared_expert=True,
+    rope_theta=50_000.0,
+    fsdp=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

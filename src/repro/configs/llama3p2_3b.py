@@ -1,0 +1,24 @@
+"""llama3.2-3b — small llama3 dense GQA transformer [hf:meta-llama].
+
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256.  head_dim=128,
+rope_theta=500000, SwiGLU.  Pure full attention => ``long_500k`` SKIPPED.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3.2-3b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=128256,
+    mlp_variant="swiglu",
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

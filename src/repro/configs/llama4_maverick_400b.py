@@ -1,0 +1,33 @@
+"""llama4-maverick-400b-a17b — MoE with interleaved dense/MoE FFNs
+[hf:meta-llama/Llama-4].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 128 experts
+top-1 + shared expert on every 2nd layer (dense FFN otherwise) — the
+Maverick interleave.  head_dim=128.  Early fusion noted in the card; the
+text backbone is what this config models (DESIGN.md §5).
+``long_500k`` SKIPPED (full attention).  fsdp=True (~0.8 TB at bf16).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    mlp_variant="swiglu",
+    moe_num_experts=128,
+    moe_top_k=1,
+    moe_every=2,
+    moe_d_ff=8192,
+    moe_shared_expert=True,
+    rope_theta=500_000.0,
+    fsdp=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,25 @@
+"""qwen2.5-3b — dense GQA transformer with QKV bias [hf:Qwen/Qwen2.5].
+
+36L d_model=2048 16H (GQA kv=2) d_ff=11008 vocab=151936.  head_dim=128.
+Pure full attention => ``long_500k`` SKIPPED (see DESIGN.md §5).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    n_layers=36,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=151936,
+    mlp_variant="swiglu",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,29 @@
+"""seamless-m4t-medium — encoder-decoder multimodal backbone
+[arXiv:2308.11596].
+
+12L encoder + 12L decoder, d_model=1024 16H (kv=16, i.e. MHA) d_ff=4096
+vocab=256206.  The audio frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings of shape (batch, src_len, d_model); the
+text decoder consumes token ids.  Decoder blocks carry cross-attention
+over cached encoder output.  ``long_500k`` SKIPPED (full attention).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    n_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    mlp_variant="gelu",
+    is_encoder_decoder=True,
+    n_encoder_layers=12,
+    frontend="audio",
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

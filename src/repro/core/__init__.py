@@ -1,0 +1,34 @@
+"""Core library: the paper's contribution (microbenchmark-driven device
+characterization) as a composable JAX module, plus the roofline/energy/
+autotune machinery that consumes it.  See DESIGN.md §1-§3 for the
+paper-to-TPU mapping."""
+
+from repro.core.device_model import (  # noqa: F401
+    DeviceModel,
+    GB203,
+    GH100,
+    HOST_CPU,
+    MemoryLevel,
+    REGISTRY,
+    TPU_V5E,
+    detect_backend_model,
+    get_device_model,
+)
+from repro.core.hlo_analysis import (  # noqa: F401
+    CollectiveStats,
+    CompiledStats,
+    HloStructure,
+    analyze_compiled,
+    parse_collectives,
+    parse_structure,
+    shape_bytes,
+)
+from repro.core.roofline import (  # noqa: F401
+    MARKDOWN_HEADER,
+    RooflineReport,
+    build_report,
+    markdown_row,
+    model_flops_dense,
+    model_flops_forward,
+)
+from repro.core.timing import TimingResult, time_fn, timer_overhead  # noqa: F401

@@ -1,0 +1,164 @@
+"""Characterization-driven autotuning — the paper's "actionable insights"
+made executable (DESIGN.md §2).
+
+The paper closes with guidance ("Blackwell favors high-ILP low-warp
+kernels", "FP64 is meant to be emulated", "precision trades power for
+range").  This module turns a :class:`~repro.core.device_model.DeviceModel`
+plus roofline inputs into concrete decisions the framework applies:
+
+* :func:`pick_matmul_block`  — BlockSpec tile selection for Pallas matmul
+  kernels (VMEM-budgeted, MXU-aligned, HBM-traffic-minimizing),
+* :func:`pick_remat_policy`  — activation checkpointing from the memory
+  roofline term vs HBM capacity,
+* :func:`rank_shardings`     — sharding-layout choice from predicted
+  per-layer collective bytes (roofline term 3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.device_model import DeviceModel
+
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1,
+                "float8_e4m3fn": 1, "float8_e5m2": 1,
+                "float6_e2m3fn": 1, "float6_e3m2fn": 1,
+                "float4_e2m1fn": 0.5}
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockChoice:
+    bm: int
+    bn: int
+    bk: int
+    vmem_bytes: float
+    hbm_bytes: float
+    predicted_s: float
+
+
+def pick_matmul_block(
+    device: DeviceModel,
+    m: int, n: int, k: int,
+    dtype: str = "bfloat16",
+    acc_dtype: str = "float32",
+    vmem_fraction: float = 0.6,
+    candidates: Sequence[int] = (128, 256, 512, 1024),
+) -> BlockChoice:
+    """Pick (bm, bn, bk) for a blocked matmul.
+
+    Napkin model (the §Perf discipline): per-(bm,bn) output tile we stream
+    the full K dimension; HBM traffic = A read n/bn times + B read m/bm
+    times + C once; VMEM working set = A-block + B-block + accumulator.
+    Predicted step time = max(compute, HBM traffic / bw).  MXU alignment is
+    enforced by construction (candidates are multiples of the MXU tile).
+    """
+    eb = _DTYPE_BYTES.get(dtype, 2)
+    ab = _DTYPE_BYTES.get(acc_dtype, 4)
+    vmem_budget = device.level("vmem").capacity_bytes * vmem_fraction \
+        if any(l.name == "vmem" for l in device.memory) else 64 * 2**20
+    peak = device.peak_flops_for(dtype)
+    hbm_bw = device.hbm.bandwidth_Bps
+
+    best: Optional[BlockChoice] = None
+    for bm, bn, bk in itertools.product(candidates, repeat=3):
+        if bm > max(m, 128) or bn > max(n, 128) or bk > max(k, 128):
+            continue
+        vmem = (bm * bk + bk * bn) * eb + bm * bn * ab
+        # double-buffered input blocks
+        vmem += (bm * bk + bk * bn) * eb
+        if vmem > vmem_budget:
+            continue
+        n_col_passes = -(-n // bn)
+        n_row_passes = -(-m // bm)
+        hbm = (m * k * eb) * n_col_passes + (k * n * eb) * n_row_passes \
+            + m * n * ab
+        compute_s = 2.0 * m * n * k / peak
+        memory_s = hbm / hbm_bw
+        pred = max(compute_s, memory_s)
+        choice = BlockChoice(bm, bn, bk, vmem, hbm, pred)
+        if best is None or choice.predicted_s < best.predicted_s:
+            best = choice
+    if best is None:  # tiny problem: single block
+        return BlockChoice(128, 128, 128,
+                           (128 * 128) * (2 * eb + ab), 0.0, 0.0)
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class RematPolicy:
+    name: str                     # none | dots | full
+    predicted_bytes: float
+    fits: bool
+    recompute_flops_factor: float
+
+
+def pick_remat_policy(
+    activation_bytes: float,
+    weight_opt_bytes: float,
+    device: DeviceModel,
+    headroom: float = 0.9,
+) -> RematPolicy:
+    """Choose the cheapest checkpointing level whose footprint fits HBM."""
+    cap = device.hbm.capacity_bytes * headroom
+    # (name, activation retention fraction, recompute factor)
+    ladder = (("none", 1.0, 1.0),
+              ("dots", 0.35, 1.15),   # keep matmul outputs only
+              ("full", 0.08, 1.33))   # keep layer boundaries only
+    chosen = None
+    for name, frac, rf in ladder:
+        total = weight_opt_bytes + activation_bytes * frac
+        chosen = RematPolicy(name, total, total <= cap, rf)
+        if chosen.fits:
+            return chosen
+    return chosen  # largest remat even if still over: caller must reshard
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    name: str
+    collective_bytes_per_layer: float
+    notes: str
+
+
+def rank_shardings(
+    *,
+    d_model: int,
+    d_ff: int,
+    n_heads: int,
+    n_kv_heads: int,
+    seq: int,
+    batch_per_replica: int,
+    tp: int,
+    dtype_bytes: int = 2,
+    moe_experts: int = 0,
+    moe_topk: int = 0,
+) -> List[ShardingPlan]:
+    """Rank candidate TP layouts by per-layer collective traffic.
+
+    Megatron-style analysis: with TP degree t, each transformer layer does
+    two all-reduces (attn out + MLP out) of the activation block
+    ``batch*seq*d_model`` unless sequence parallelism converts them into
+    reduce-scatter + all-gather (same bytes, half latency exposure,
+    overlappable).  MoE adds two all-to-alls of the routed tokens.
+    """
+    act = batch_per_replica * seq * d_model * dtype_bytes
+    plans = []
+    # 1. pure TP (Megatron): 2 all-reduce per layer, each 2x(t-1)/t ring bytes
+    ring = 2.0 * (tp - 1) / tp if tp > 1 else 0.0
+    plans.append(ShardingPlan(
+        "tp-allreduce", 2 * act * ring,
+        "2 all-reduce/layer on activations (Megatron baseline)"))
+    # 2. TP + sequence parallelism: RS+AG pairs, (t-1)/t bytes each way
+    sp = (tp - 1) / tp if tp > 1 else 0.0
+    plans.append(ShardingPlan(
+        "tp-seqparallel", 4 * act * sp * 0.5,
+        "reduce-scatter + all-gather pairs; overlappable with compute"))
+    # 3. MoE expert parallel: 2 all-to-all of routed tokens
+    if moe_experts:
+        routed = act * moe_topk
+        plans.append(ShardingPlan(
+            "ep-alltoall", 2 * routed * (tp - 1) / max(tp, 1),
+            f"dispatch+combine all-to-all over {moe_experts} experts"))
+    return sorted(plans, key=lambda p: p.collective_bytes_per_layer)

@@ -1,0 +1,249 @@
+"""Compiled-HLO analysis — the framework's "SASS inspection" (§V.B analogue).
+
+The paper inspects generated SASS to learn which hardware pipeline each PTX
+``mma`` variant actually dispatches to (HMMA/QMMA/OMMA) and to confirm that
+microbenchmark instructions were not optimized away.  Our compiled artifact
+is XLA HLO; this module extracts from it:
+
+* FLOPs / bytes-accessed (via ``compiled.cost_analysis()``),
+* collective-communication bytes, per collective kind, by parsing the
+  optimized HLO text (``compiled.as_text()``) — these feed roofline term 3,
+* per-device memory footprint (``compiled.memory_analysis()``),
+* structural signals: fusion/dot/convert counts and remat-induced duplicate
+  ops (duplicate ``op_name`` metadata), the §Perf "profile" on a machine with
+  no real-TPU trace.
+
+The parser is intentionally tolerant: HLO printers differ across XLA
+versions, and short operand forms omit shapes (we then fall back to the
+result shape, which is exact for all-reduce/all-to-all/collective-permute
+and an upper bound for all-gather).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import re
+from typing import Any, Dict, Iterable, Mapping, Optional, Tuple
+
+_BYTES_PER_ELEM = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f4e2m1fn": 0.5, "f6e2m3fn": 1, "f6e3m2fn": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(sorted(_BYTES_PER_ELEM, key=len, reverse=True))
+    + r")\[([0-9,]*)\]"
+)
+
+# Collective opcodes whose traffic lands on the interconnect.  ``-done`` ops
+# are bookkeeping for async pairs and must not be double counted.
+_COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_OP_LINE_RE = re.compile(
+    r"=\s+(?P<result>\([^)]*\)|\S+)\s+(?P<opcode>[a-z0-9-]+)\(")
+
+
+def shape_bytes(text: str) -> float:
+    """Sum bytes of every ``dtype[d0,d1,...]`` shape literal in ``text``."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES_PER_ELEM[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Interconnect traffic extracted from optimized HLO."""
+
+    total_bytes: float = 0.0
+    bytes_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: collections.defaultdict(float))
+    count_by_kind: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: collections.defaultdict(int))
+
+    def merge(self, other: "CollectiveStats") -> "CollectiveStats":
+        out = CollectiveStats(self.total_bytes + other.total_bytes)
+        for src in (self.bytes_by_kind, other.bytes_by_kind):
+            for k, v in src.items():
+                out.bytes_by_kind[k] += v
+        for src in (self.count_by_kind, other.count_by_kind):
+            for k, v in src.items():
+                out.count_by_kind[k] += v
+        return out
+
+
+def _split_operands(line: str, opcode: str) -> Optional[str]:
+    """Text between the opcode's '(' and its matching ')'."""
+    start = line.find(opcode + "(")
+    if start < 0:
+        return None
+    i = start + len(opcode) + 1
+    depth = 1
+    j = i
+    while j < len(line) and depth:
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+        j += 1
+    return line[i:j - 1]
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.search(line)
+        if not m:
+            continue
+        opcode = m.group("opcode")
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if opcode.endswith("-done"):
+            continue
+        if base not in _COLLECTIVE_KINDS:
+            continue
+        operands = _split_operands(line, opcode)
+        nbytes = shape_bytes(operands) if operands else 0.0
+        if nbytes == 0.0:
+            # Short operand form: fall back to the result shape.
+            nbytes = shape_bytes(m.group("result"))
+        stats.total_bytes += nbytes
+        stats.bytes_by_kind[base] += nbytes
+        stats.count_by_kind[base] += 1
+    return stats
+
+
+@dataclasses.dataclass
+class HloStructure:
+    """Structural profile of the optimized HLO (the dry-run "trace")."""
+
+    n_fusions: int = 0
+    n_dots: int = 0
+    n_converts: int = 0
+    n_while: int = 0
+    n_reshapes: int = 0
+    n_transposes: int = 0
+    n_custom_calls: int = 0
+    remat_duplicate_ops: int = 0
+    dot_bytes: float = 0.0
+
+
+_METADATA_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def parse_structure(hlo_text: str) -> HloStructure:
+    s = HloStructure()
+    op_names: collections.Counter = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.search(line)
+        if not m:
+            continue
+        opcode = m.group("opcode")
+        if opcode == "fusion":
+            s.n_fusions += 1
+        elif opcode == "dot":
+            s.n_dots += 1
+            s.dot_bytes += shape_bytes(m.group("result"))
+        elif opcode == "convert":
+            s.n_converts += 1
+        elif opcode == "while":
+            s.n_while += 1
+        elif opcode == "reshape":
+            s.n_reshapes += 1
+        elif opcode == "transpose":
+            s.n_transposes += 1
+        elif opcode == "custom-call":
+            s.n_custom_calls += 1
+        mm = _METADATA_RE.search(line)
+        if mm:
+            op_names[mm.group(1)] += 1
+    # Ops whose source op_name appears >1x in the final module are usually
+    # remat-induced recompute (or compiler CSE failures) — §Perf hint.
+    s.remat_duplicate_ops = sum(c - 1 for c in op_names.values() if c > 1)
+    return s
+
+
+def _first(d: Any) -> Mapping[str, float]:
+    """cost_analysis() historically returned [dict] per device; now a dict."""
+    if d is None:
+        return {}
+    if isinstance(d, (list, tuple)):
+        return d[0] if d else {}
+    return d
+
+
+@dataclasses.dataclass
+class CompiledStats:
+    """Everything the roofline needs from one compiled executable.
+
+    ``flops`` / ``bytes_accessed`` / ``collectives`` come from the
+    loop-aware HLO walk (``repro.core.hlo_cost``) — ``cost_analysis()``
+    counts while-loop bodies once and undercounts scan-heavy programs by
+    orders of magnitude; its raw values are retained as ``xla_flops`` /
+    ``xla_bytes`` for cross-checking.
+    """
+
+    flops: float
+    bytes_accessed: float
+    collectives: CollectiveStats
+    structure: HloStructure
+    # raw (loop-unaware) XLA cost_analysis values, for comparison
+    xla_flops: float = 0.0
+    xla_bytes: float = 0.0
+    # memory_analysis numbers are *per device* under SPMD.
+    argument_bytes: int = 0
+    output_bytes: int = 0
+    temp_bytes: int = 0
+    peak_bytes: int = 0
+
+    @property
+    def per_device_bytes(self) -> int:
+        return self.argument_bytes + self.output_bytes + self.temp_bytes
+
+
+def analyze_compiled(compiled: Any, hlo_text: Optional[str] = None
+                     ) -> CompiledStats:
+    """Extract :class:`CompiledStats` from a ``jax`` compiled executable."""
+    from repro.core.hlo_cost import analyze_hlo_text
+
+    cost = _first(getattr(compiled, "cost_analysis", lambda: {})() or {})
+    if hlo_text is None:
+        hlo_text = compiled.as_text()
+    loop_aware = analyze_hlo_text(hlo_text)
+    coll = loop_aware.collectives
+    structure = parse_structure(hlo_text)
+
+    arg_b = out_b = tmp_b = peak_b = 0
+    try:
+        mem = compiled.memory_analysis()
+        arg_b = int(getattr(mem, "argument_size_in_bytes", 0) or 0)
+        out_b = int(getattr(mem, "output_size_in_bytes", 0) or 0)
+        tmp_b = int(getattr(mem, "temp_size_in_bytes", 0) or 0)
+        alias_b = int(getattr(mem, "alias_size_in_bytes", 0) or 0)
+        peak_b = arg_b + out_b + tmp_b - alias_b
+    except Exception:  # pragma: no cover - backend-dependent
+        pass
+
+    return CompiledStats(
+        flops=loop_aware.flops,
+        bytes_accessed=loop_aware.bytes,
+        collectives=coll,
+        structure=structure,
+        xla_flops=float(cost.get("flops", 0.0) or 0.0),
+        xla_bytes=float(cost.get("bytes accessed", 0.0) or 0.0),
+        argument_bytes=arg_b,
+        output_bytes=out_b,
+        temp_bytes=tmp_b,
+        peak_bytes=peak_b,
+    )

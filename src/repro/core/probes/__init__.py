@@ -1,0 +1,27 @@
+"""Microbenchmark probe suite — the paper's §IV-§VI, TPU/JAX-adapted.
+
+Each submodule mirrors one subsystem the paper dissects:
+
+* :mod:`repro.core.probes.compute`    — §IV: execution-pipeline latency /
+  completion latency / ILP ramp (Tab III, Fig 2/3)
+* :mod:`repro.core.probes.memory`     — §VI: pointer-chase hierarchy walk,
+  stride sweeps, streaming bandwidth, concurrency scaling (Fig 6-10)
+* :mod:`repro.core.probes.matmul`     — §V: matrix-unit tile sweep and
+  grid x ILP scaling (Fig 4/5, Tab VII)
+* :mod:`repro.core.probes.precision`  — §V.A-C: FP4/FP6/FP8 support matrix,
+  numerics, block scaling (Tab IV/V/VI)
+* :mod:`repro.core.probes.collectives`— beyond-paper: interconnect
+  alpha-beta characterization feeding roofline term 3
+
+Probes are pure JAX and run on any backend; on this container's CPU they
+characterize the host (methodology validation), on TPU the real target.
+Pallas-kernel variants of the hot probes live in ``repro.kernels.probe_*``.
+"""
+
+from repro.core.probes import (  # noqa: F401
+    collectives,
+    compute,
+    matmul,
+    memory,
+    precision,
+)

@@ -1,0 +1,136 @@
+"""Interconnect probes — beyond-paper extension (DESIGN.md §3, §8.5).
+
+The paper is single-GPU; a 1000+-node framework needs roofline term 3
+(collectives).  This module characterizes each collective's alpha-beta model
+
+    t(bytes) = alpha + bytes / beta
+
+by timing ``psum`` / ``all_gather`` / ``ppermute`` over a device mesh when
+more than one device is available, and falling back to the DeviceModel's
+published link constants otherwise (this CPU container has one device; the
+multi-device path is exercised in tests via a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import timing
+from repro.core.device_model import DeviceModel, detect_backend_model
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectivePoint:
+    collective: str
+    nbytes: int
+    devices: int
+    seconds: float
+    algo_gbps: float            # nbytes / t — algorithm bandwidth
+
+
+@dataclasses.dataclass(frozen=True)
+class AlphaBeta:
+    collective: str
+    devices: int
+    alpha_s: float              # latency term
+    beta_Bps: float             # bandwidth term
+    measured: bool              # False => analytical fallback
+
+
+def _collective_fn(name: str, mesh: jax.sharding.Mesh) -> Callable:
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if name == "psum":
+        def inner(x):
+            return jax.lax.psum(x, "d")
+    elif name == "all_gather":
+        def inner(x):
+            return jax.lax.all_gather(x, "d")
+    elif name == "ppermute":
+        n = mesh.devices.size
+
+        def inner(x):
+            return jax.lax.ppermute(
+                x, "d", [(i, (i + 1) % n) for i in range(n)])
+    else:
+        raise ValueError(name)
+
+    return jax.jit(shard_map(inner, mesh=mesh, in_specs=P("d"),
+                             out_specs=P() if name == "psum" else P("d")
+                             if name == "ppermute" else P(None, "d")))
+
+
+def measure_collective(
+    name: str,
+    nbytes: int,
+    iters: int = 10,
+) -> Optional[CollectivePoint]:
+    """Time one collective at one size; None if <2 devices available."""
+    devs = jax.devices()
+    if len(devs) < 2:
+        return None
+    mesh = jax.sharding.Mesh(np.asarray(devs), ("d",))
+    n = max(nbytes // 4, len(devs))
+    n -= n % len(devs)
+    x = jnp.ones((n,), jnp.float32)
+    fn = _collective_fn(name, mesh)
+    t = timing.time_fn(fn, x, iters=iters)
+    return CollectivePoint(
+        collective=name, nbytes=n * 4, devices=len(devs),
+        seconds=t.median_s, algo_gbps=n * 4 / t.median_s / 1e9,
+    )
+
+
+def fit_alpha_beta(points: Sequence[CollectivePoint]) -> AlphaBeta:
+    """Least-squares fit of t = alpha + bytes/beta."""
+    xs = np.asarray([p.nbytes for p in points], np.float64)
+    ts = np.asarray([p.seconds for p in points], np.float64)
+    A = np.stack([np.ones_like(xs), xs], axis=1)
+    (alpha, inv_beta), *_ = np.linalg.lstsq(A, ts, rcond=None)
+    beta = 1.0 / inv_beta if inv_beta > 0 else float("inf")
+    return AlphaBeta(
+        collective=points[0].collective,
+        devices=points[0].devices,
+        alpha_s=max(float(alpha), 0.0),
+        beta_Bps=float(beta),
+        measured=True,
+    )
+
+
+def characterize(
+    names: Sequence[str] = ("psum", "all_gather", "ppermute"),
+    sizes: Sequence[int] = (1 << 16, 1 << 18, 1 << 20, 1 << 22, 1 << 24),
+    device: DeviceModel | None = None,
+    iters: int = 8,
+) -> List[AlphaBeta]:
+    """alpha-beta per collective; analytical fallback on 1 device."""
+    device = device or detect_backend_model()
+    out: List[AlphaBeta] = []
+    for name in names:
+        pts = [p for s in sizes
+               if (p := measure_collective(name, s, iters)) is not None]
+        if len(pts) >= 2:
+            out.append(fit_alpha_beta(pts))
+        else:
+            # Published-constant fallback: ring latency ~1us/hop, bandwidth
+            # = per-link bw (psum moves 2x data, accounted via beta/2).
+            beta = device.link_Bps or 10e9
+            out.append(AlphaBeta(
+                collective=name, devices=max(jax.device_count(), 1),
+                alpha_s=1e-6,
+                beta_Bps=beta / 2 if name == "psum" else beta,
+                measured=False,
+            ))
+    return out
+
+
+def predicted_time(ab: AlphaBeta, nbytes: int) -> float:
+    return ab.alpha_s + nbytes / ab.beta_Bps

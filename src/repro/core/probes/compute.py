@@ -1,0 +1,236 @@
+"""Execution-pipeline probes — paper §IV (Tab III, Fig 2/3).
+
+The paper distinguishes:
+
+* **True latency** — a serialized chain of *dependent* instructions
+  (``mad.lo.s32`` / ``fma.rn.f32``): cycles until a result is usable by the
+  next instruction.
+* **Completion latency** — *independent* instructions allowed to overlap:
+  cycles/instruction once the pipeline can parallelize.
+
+and sweeps dependent-chain length 1..1024 to expose scheduler ramp-up
+(Fig 2/3), plus mixed INT32/FP32 streams to expose the unified-core
+behaviour of GB203 and the FP64-unit scarcity (2/SM on GB203, none on TPU).
+
+TPU adaptation (DESIGN.md §3): the chain is a value carried through an
+*unrolled* sequence of ``x*a+b`` ops — dependent => true latency; a wide
+vector of independent lanes => completion latency.  "Cycles" are wall-time
+converted via the device clock.  FP64 on TPU has no ALU — with JAX's default
+x64-disabled config it is silently downcast, so each result records whether
+the measurement is native, emulated or downcast.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import timing
+from repro.core.device_model import DeviceModel, detect_backend_model
+
+# Independent lanes for completion-latency/throughput probes (the analogue
+# of issuing across many warps).
+_LANES = 4096
+
+
+def _is_x64_native(dtype) -> bool:
+    return jnp.zeros((), dtype).dtype == jnp.dtype(dtype)
+
+
+def _init_vals(shape, dtype):
+    if jnp.issubdtype(dtype, jnp.integer):
+        return (jnp.full(shape, 1, dtype), jnp.asarray(3, dtype),
+                jnp.asarray(1, dtype))
+    return (jnp.full(shape, 1.0001, dtype), jnp.asarray(1.0000001, dtype),
+            jnp.asarray(1e-7, dtype))
+
+
+def _make_chain(n: int, lanes: int, dtype) -> Callable:
+    """Jitted fn: unrolled chain of ``n`` dependent mad/fma ops.
+
+    ``lanes == 1`` -> one scalar dependent chain (true latency);
+    ``lanes > 1``  -> that many independent chains (completion latency).
+    Unrolled, not looped — like the paper's generated PTX sequences — so
+    loop control does not pollute short chains.
+    """
+    shape = () if lanes == 1 else (lanes,)
+
+    @jax.jit
+    def fn(x, a, b):
+        for _ in range(n):
+            x = x * a + b
+        return x
+
+    return partial(fn, *_init_vals(shape, dtype))
+
+
+def _make_mixed1(n: int, lanes: int) -> Callable:
+    """Interleaved *independent* int32+fp32 dependent chains (co-issue
+    test — the paper's Mixed 1: does a unified INT/FP pipeline co-schedule
+    two pure streams?)."""
+    shape = () if lanes == 1 else (lanes,)
+
+    @jax.jit
+    def fn(xi, xf, ai, bi, af, bf):
+        for _ in range(n):
+            xi = xi * ai + bi
+            xf = xf * af + bf
+        return xi, xf
+
+    xi, ai, bi = _init_vals(shape, jnp.int32)
+    xf, af, bf = _init_vals(shape, jnp.float32)
+    return partial(fn, xi, xf, ai, bi, af, bf)
+
+
+def _make_mixed2(n: int, lanes: int) -> Callable:
+    """Cross-dependent int<->fp chain with converts (hazard test — the
+    paper's Mixed 2: forces the scheduler to alternate pipelines on a
+    single dependence chain)."""
+    shape = () if lanes == 1 else (lanes,)
+
+    @jax.jit
+    def fn(xi, xf, af, bf):
+        for _ in range(n // 2):
+            xf = xf * af + xi.astype(jnp.float32)
+            xi = (xf * 0.5).astype(jnp.int32) + xi
+        return xi, xf
+
+    xi, _, _ = _init_vals(shape, jnp.int32)
+    xf, af, bf = _init_vals(shape, jnp.float32)
+    return partial(fn, xi, xf, af, bf)
+
+
+_WORKLOADS: Dict[str, dict] = {
+    "int32": dict(kind="pure", dtype=jnp.int32, ops_per_step=1),
+    "fp32": dict(kind="pure", dtype=jnp.float32, ops_per_step=1),
+    "fp64": dict(kind="pure", dtype=jnp.float64, ops_per_step=1),
+    "mixed1": dict(kind="mixed1", dtype=None, ops_per_step=2),
+    "mixed2": dict(kind="mixed2", dtype=None, ops_per_step=2),
+}
+
+
+def _builder(workload: str):
+    spec = _WORKLOADS[workload]
+    if spec["kind"] == "pure":
+        return lambda n, lanes: _make_chain(n, lanes, spec["dtype"])
+    if spec["kind"] == "mixed1":
+        return _make_mixed1
+    return _make_mixed2
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyResult:
+    """One Tab III cell: per-instruction latency, ns and device cycles."""
+
+    workload: str
+    support: str                  # native | downcast | emulated
+    true_ns: float
+    completion_ns: float
+    true_cycles: float
+    completion_cycles: float
+
+
+def measure_latency(
+    workload: str,
+    device: DeviceModel | None = None,
+    chain: int = 256,
+    iters: int = 20,
+) -> LatencyResult:
+    """Measure one workload's true + completion latency (Tab III)."""
+    device = device or detect_backend_model()
+    spec = _WORKLOADS[workload]
+    make = _builder(workload)
+    n_ops = spec["ops_per_step"] * chain if spec["kind"] != "pure" else chain
+
+    base1 = timing.time_fn(make(0, 1), iters=iters)
+    full1 = timing.time_fn(make(chain, 1), iters=iters)
+    baseL = timing.time_fn(make(0, _LANES), iters=iters)
+    fullL = timing.time_fn(make(chain, _LANES), iters=iters)
+    t_true = timing.amortized_ns(full1, base1, n_ops)
+    t_comp = timing.amortized_ns(fullL, baseL, n_ops)
+
+    support = "native"
+    if workload == "fp64":
+        if device.kind == "tpu":
+            support = "emulated"
+        elif not _is_x64_native(jnp.float64):
+            support = "downcast"
+
+    clock = device.clock_hz
+    return LatencyResult(
+        workload=workload,
+        support=support,
+        true_ns=t_true,
+        completion_ns=t_comp,
+        true_cycles=t_true * 1e-9 * clock,
+        completion_cycles=t_comp * 1e-9 * clock,
+    )
+
+
+def latency_table(device: DeviceModel | None = None,
+                  workloads: Sequence[str] = tuple(_WORKLOADS),
+                  chain: int = 256, iters: int = 20) -> List[LatencyResult]:
+    """The full Tab III analogue."""
+    return [measure_latency(w, device, chain, iters) for w in workloads]
+
+
+@dataclasses.dataclass(frozen=True)
+class RampPoint:
+    """One Fig 2/3 point: dependent-chain length vs cycles & throughput."""
+
+    chain_len: int
+    total_ns: float
+    total_cycles: float
+    ops_per_cycle: float
+
+
+def ilp_ramp(
+    workload: str = "fp32",
+    lengths: Sequence[int] = (1, 2, 4, 6, 8, 12, 16, 24, 32, 48, 64,
+                              128, 256, 512, 1024),
+    lanes: int = _LANES,
+    device: DeviceModel | None = None,
+    iters: int = 15,
+) -> List[RampPoint]:
+    """Fig 2/3 analogue: sweep chain length, report total time & throughput.
+
+    ``lanes`` independent chains of ``n`` dependent ops each — as ``n``
+    grows the scheduler can hide latency across lanes; the paper observes a
+    plateau past ~64 and sharper ramp differences between architectures.
+    """
+    device = device or detect_backend_model()
+    make = _builder(workload)
+    base = timing.time_fn(make(0, lanes), iters=iters)
+    out: List[RampPoint] = []
+    ops_per_step = _WORKLOADS[workload]["ops_per_step"]
+    for n in lengths:
+        t = timing.time_fn(make(n, lanes), iters=iters)
+        dt = max(t.median_s - base.median_s, 1e-12)
+        n_ops = n * ops_per_step * lanes
+        cycles = timing.to_cycles(dt, device.clock_hz)
+        out.append(RampPoint(
+            chain_len=n,
+            total_ns=dt * 1e9,
+            total_cycles=cycles,
+            ops_per_cycle=n_ops / cycles if cycles > 0 else 0.0,
+        ))
+    return out
+
+
+def fp64_emulation_factor(device: DeviceModel | None = None,
+                          iters: int = 15) -> float:
+    """§IV.C: how much slower is an fp64 chain than fp32 (per op)?
+
+    On GB203 the paper finds 63.57 vs 4 cycles (~16x) because only 2 FP64
+    units exist per SM; on TPU the factor measures XLA's software emulation
+    (or the downcast no-op if x64 is disabled, factor ~1).
+    """
+    f32 = measure_latency("fp32", device, iters=iters)
+    f64 = measure_latency("fp64", device, iters=iters)
+    if f32.completion_ns <= 0:
+        return 0.0
+    return f64.completion_ns / f32.completion_ns

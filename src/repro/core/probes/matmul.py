@@ -1,0 +1,158 @@
+"""Matrix-unit probes — paper §V (Fig 4/5) and §VII.A (Fig 11, Tab VII).
+
+The paper sweeps ``mma`` tile shapes (m16n8k32 etc.), precision formats, and
+(warp count x ILP) to locate the tensor-core saturation point, then runs a
+dense-GEMM case study across matrix sizes.
+
+TPU adaptation (DESIGN.md §3): the MXU is a 128x128 systolic array, not
+per-warp fragments.  The tile axis becomes the matmul block shape — aligned
+(multiples of 128) vs misaligned shapes expose padding waste; the warp axis
+becomes batch/grid parallelism; the ILP axis becomes independent accumulator
+chains within one dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import timing
+from repro.core.device_model import DeviceModel, detect_backend_model
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulPoint:
+    m: int
+    n: int
+    k: int
+    dtype: str
+    batch: int                 # "warp count" analogue (parallel tiles)
+    ilp: int                   # independent chains per dispatch
+    runtime_ms: float
+    tflops: float              # (2*M*N*K*batch*ilp)/runtime — paper Eq. 2
+    aligned: bool              # all dims multiples of the MXU tile
+
+
+def _aligned(m: int, n: int, k: int, tile: int) -> bool:
+    return m % tile == 0 and n % tile == 0 and k % tile == 0
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _mm_ilp(a: jax.Array, b: jax.Array, ilp: int) -> jax.Array:
+    """``ilp`` independent matmul chains over batched operands.
+
+    a: (batch, ilp, m, k), b: (batch, ilp, k, n).  Each (batch, ilp) cell is
+    an independent product; the sum forces completion of all of them.
+    """
+    out = jnp.einsum("bimk,bikn->bimn", a, b,
+                     preferred_element_type=jnp.float32)
+    return out.sum(axis=(1, 2, 3))
+
+
+def measure_matmul(
+    m: int, n: int, k: int,
+    dtype: str = "bfloat16",
+    batch: int = 1,
+    ilp: int = 1,
+    device: DeviceModel | None = None,
+    iters: int = 10,
+) -> MatmulPoint:
+    device = device or detect_backend_model()
+    dt = jnp.dtype(dtype)
+    key = jax.random.PRNGKey(0)
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (batch, ilp, m, k), jnp.float32).astype(dt)
+    b = jax.random.normal(kb, (batch, ilp, k, n), jnp.float32).astype(dt)
+    t = timing.time_fn(_mm_ilp, a, b, ilp, iters=iters)
+    flops = 2.0 * m * n * k * batch * ilp
+    return MatmulPoint(
+        m=m, n=n, k=k, dtype=dtype, batch=batch, ilp=ilp,
+        runtime_ms=t.median_s * 1e3,
+        tflops=flops / t.median_s / 1e12,
+        aligned=_aligned(m, n, k, device.matrix_tile[0] or 128),
+    )
+
+
+def tile_sweep(
+    dtype: str = "bfloat16",
+    shapes: Optional[Sequence[tuple]] = None,
+    device: DeviceModel | None = None,
+    iters: int = 10,
+) -> List[MatmulPoint]:
+    """§V.B analogue: aligned vs misaligned tile shapes.
+
+    Misaligned shapes (not multiples of the 128-wide MXU) get padded by the
+    compiler — visible as a TFLOP/s drop at near-identical nominal FLOPs,
+    the same operand-staging story as the paper's tile-shape table.
+    """
+    if shapes is None:
+        shapes = [
+            (128, 128, 128), (256, 256, 256), (512, 512, 512),
+            (1024, 1024, 1024),
+            # misaligned: +/-1 off the MXU tile and odd fractions
+            (127, 127, 127), (129, 129, 129), (96, 96, 96),
+            (384, 384, 100), (1000, 1000, 1000),
+        ]
+    return [measure_matmul(m, n, k, dtype, device=device, iters=iters)
+            for (m, n, k) in shapes]
+
+
+def warp_ilp_sweep(
+    dtype: str = "bfloat16",
+    batches: Sequence[int] = (1, 2, 4, 8, 16, 32),
+    ilps: Sequence[int] = (1, 2, 4, 6, 8),
+    m: int = 128, n: int = 128, k: int = 128,
+    device: DeviceModel | None = None,
+    iters: int = 8,
+) -> List[MatmulPoint]:
+    """Fig 4/5 analogue: throughput/latency vs (parallel tiles x ILP).
+
+    The paper finds GB203 saturates at ILP=6 with 25 warps and GH100 at
+    ILP=5 with 29 warps; here the analogous saturation point is where
+    TFLOP/s stops growing with ``batch`` (occupancy) or ``ilp``.
+    """
+    out = []
+    for b in batches:
+        for i in ilps:
+            out.append(measure_matmul(m, n, k, dtype, batch=b, ilp=i,
+                                      device=device, iters=iters))
+    return out
+
+
+def saturation_point(points: Sequence[MatmulPoint],
+                     tol: float = 0.05) -> MatmulPoint:
+    """First point achieving within ``tol`` of the sweep's peak TFLOP/s —
+    the paper's "maximum ILP level at which sustained throughput is
+    achieved"."""
+    peak = max(p.tflops for p in points)
+    for p in sorted(points, key=lambda p: (p.batch, p.ilp)):
+        if p.tflops >= (1 - tol) * peak:
+            return p
+    return points[-1]
+
+
+def gemm_case_study(
+    dtype: str = "bfloat16",
+    sizes: Sequence[tuple] = (
+        (512, 512, 512),
+        (1024, 1024, 1024),
+        (2048, 2048, 2048),
+        (2048, 2048, 4096),
+        (2048, 4096, 8192),
+        (4096, 4096, 4096),
+    ),
+    device: DeviceModel | None = None,
+    iters: int = 5,
+) -> List[MatmulPoint]:
+    """§VII.A (Fig 11, Tab VII): D-GEMM runtime/TFLOPs across sizes.
+
+    The paper's 8192-cube is ~1.1 TB of fp32 intermediates on a 1-core CPU;
+    the default sweep stops at 4096 and the benchmark harness extrapolates
+    via the roofline model for the 8192 row (flagged as modeled).
+    """
+    return [measure_matmul(m, n, k, dtype, device=device, iters=iters)
+            for (m, n, k) in sizes]

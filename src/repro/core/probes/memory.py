@@ -1,0 +1,237 @@
+"""Memory-subsystem probes — paper §VI (Fig 6-10).
+
+* :func:`pointer_chase`      — Fig 6: serialized random dependent loads over
+  a swept working set; latency steps reveal hierarchy boundaries (L1/L2/HBM
+  on GPU, VMEM/HBM on TPU, L1/L2/L3/DRAM on the host CPU this container
+  actually runs on).
+* :func:`stride_sweep`       — Fig 7/8: strided access latency (bank/lane
+  conflict analogue) across concurrency levels.
+* :func:`stream_bandwidth`   — Fig 10: sustained read/write/copy bandwidth.
+* :func:`concurrency_scaling`— Fig 9: per-stream time as independent streams
+  grow (the L2-partition-contention question, TPU/CPU analogue: does the
+  shared bandwidth degrade or saturate gracefully?).
+* :func:`find_boundaries`    — extracts capacity estimates from the chase
+  curve like the paper reads Tab II capacities off its latency spikes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import timing
+from repro.core.device_model import DeviceModel, detect_backend_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ChasePoint:
+    working_set_bytes: int
+    ns_per_load: float
+    cycles_per_load: float
+
+
+def _permutation_chain(n: int, seed: int = 0) -> np.ndarray:
+    """Single-cycle random permutation (Sattolo) => the chase visits every
+    element exactly once with no shortcut the prefetcher can exploit."""
+    rng = np.random.default_rng(seed)
+    idx = np.arange(n, dtype=np.int32)
+    for i in range(n - 1, 0, -1):
+        j = rng.integers(0, i)
+        idx[i], idx[j] = idx[j], idx[i]
+    # idx is now a permutation; build "next" pointers following the cycle.
+    nxt = np.empty(n, dtype=np.int32)
+    nxt[idx[:-1]] = idx[1:]
+    nxt[idx[-1]] = idx[0]
+    return nxt
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _chase(arr: jax.Array, steps: int) -> jax.Array:
+    def body(_, idx):
+        return arr[idx]
+    return jax.lax.fori_loop(0, steps, body, jnp.int32(0))
+
+
+def pointer_chase(
+    working_set_bytes: int,
+    steps: int = 1 << 14,
+    device: DeviceModel | None = None,
+    iters: int = 7,
+    seed: int = 0,
+) -> ChasePoint:
+    """Latency of one serialized random load within ``working_set_bytes``."""
+    device = device or detect_backend_model()
+    n = max(working_set_bytes // 4, 16)          # int32 elements
+    arr = jnp.asarray(_permutation_chain(n, seed))
+    t = timing.time_fn(_chase, arr, steps, iters=iters)
+    ns = t.median_s / steps * 1e9
+    return ChasePoint(
+        working_set_bytes=n * 4,
+        ns_per_load=ns,
+        cycles_per_load=ns * 1e-9 * device.clock_hz,
+    )
+
+
+def chase_curve(
+    sizes: Sequence[int] = tuple(
+        1 << p for p in range(12, 28)),          # 4 KiB .. 128 MiB
+    steps: int = 1 << 14,
+    device: DeviceModel | None = None,
+    iters: int = 5,
+) -> List[ChasePoint]:
+    """Fig 6 analogue: the full hierarchy walk."""
+    return [pointer_chase(s, steps, device, iters) for s in sizes]
+
+
+def find_boundaries(curve: Sequence[ChasePoint],
+                    jump: float = 1.4) -> List[int]:
+    """Working-set sizes at which latency jumps by >= ``jump``x — the
+    paper's "latency spikes correspond to cache boundaries"."""
+    out = []
+    for prev, cur in zip(curve, curve[1:]):
+        if prev.ns_per_load > 0 and \
+                cur.ns_per_load / prev.ns_per_load >= jump:
+            out.append(prev.working_set_bytes)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Strided access (Fig 7/8 — bank-conflict analogue)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StridePoint:
+    stride: int
+    concurrency: int
+    ns_per_access: float
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def _strided_reduce(x: jax.Array, stride: int, lanes: int,
+                    accesses: int) -> jax.Array:
+    # ``lanes`` independent streams each reading ``accesses`` elements at
+    # ``stride`` spacing — gather-based so XLA cannot coalesce it away.
+    base = jnp.arange(lanes, dtype=jnp.int32)[:, None]
+    offs = (jnp.arange(accesses, dtype=jnp.int32)[None, :] * stride)
+    idx = (base * accesses * stride + offs) % x.shape[0]
+    return x[idx].sum()
+
+
+def stride_sweep(
+    strides: Sequence[int] = (1, 4),
+    concurrencies: Sequence[int] = (1, 2, 4, 8, 16, 32),
+    accesses: int = 4096,
+    working_set_bytes: int = 1 << 22,
+    iters: int = 7,
+) -> List[StridePoint]:
+    """Fig 7/8 analogue: latency vs concurrency for unit vs skewed stride."""
+    n = working_set_bytes // 4
+    x = jnp.arange(n, dtype=jnp.float32)
+    out = []
+    for s in strides:
+        for c in concurrencies:
+            t = timing.time_fn(_strided_reduce, x, s, c, accesses,
+                               iters=iters)
+            out.append(StridePoint(
+                stride=s, concurrency=c,
+                ns_per_access=t.median_s / (c * accesses) * 1e9,
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Streaming bandwidth (Fig 10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthResult:
+    mode: str                 # read | write | copy
+    nbytes: int
+    gbps: float
+
+
+@jax.jit
+def _bw_read(x):
+    return x.sum()
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _bw_write(n, out, c):
+    del out
+    return jnp.full((n,), c, jnp.float32)
+
+
+@jax.jit
+def _bw_copy(x):
+    return x * 1.0
+
+
+def stream_bandwidth(
+    nbytes: int = 1 << 28,
+    modes: Sequence[str] = ("read", "write", "copy"),
+    iters: int = 7,
+) -> List[BandwidthResult]:
+    n = nbytes // 4
+    x = jnp.ones((n,), jnp.float32)
+    out: List[BandwidthResult] = []
+    for mode in modes:
+        if mode == "read":
+            t = timing.time_fn(_bw_read, x, iters=iters)
+            moved = n * 4
+        elif mode == "write":
+            buf = jnp.zeros((n,), jnp.float32)
+            # donate the buffer so each call truly writes n*4 bytes
+            t = timing.time_fn(lambda: _bw_write(n, jnp.zeros((n,),
+                               jnp.float32), jnp.float32(1.0)), iters=iters)
+            moved = n * 4
+            del buf
+        else:
+            t = timing.time_fn(_bw_copy, x, iters=iters)
+            moved = 2 * n * 4
+        out.append(BandwidthResult(mode, moved,
+                                   moved / t.median_s / 1e9))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Concurrency scaling (Fig 9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConcurrencyPoint:
+    streams: int
+    ns_per_stream_access: float
+    aggregate_gbps: float
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _multi_stream(x: jax.Array, streams: int) -> jax.Array:
+    xs = x.reshape(streams, -1)
+    return jax.vmap(jnp.sum)(xs).sum()
+
+
+def concurrency_scaling(
+    streams_list: Sequence[int] = (1, 2, 4, 8, 16, 32),
+    total_bytes: int = 1 << 26,
+    iters: int = 7,
+) -> List[ConcurrencyPoint]:
+    """Fig 9 analogue: fixed total traffic split across N concurrent
+    streams; graceful saturation vs contention collapse."""
+    n = total_bytes // 4
+    out = []
+    for s in streams_list:
+        m = (n // s) * s
+        x = jnp.ones((m,), jnp.float32)
+        t = timing.time_fn(_multi_stream, x, s, iters=iters)
+        accesses_per_stream = m // s
+        out.append(ConcurrencyPoint(
+            streams=s,
+            ns_per_stream_access=t.median_s / accesses_per_stream * 1e9,
+            aggregate_gbps=m * 4 / t.median_s / 1e9,
+        ))
+    return out

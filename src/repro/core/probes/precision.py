@@ -1,0 +1,174 @@
+"""Low-precision format probes — paper §V.A-C (Tab IV/V/VI).
+
+The paper enumerates the FP4/FP6/FP8 ``mma`` variants Blackwell accepts
+(`.kind::f8f6f4`), inspects the SASS each lowers to (QMMA vs OMMA vs HMMA —
+discovering FP4 *falls back* to the FP8 QMMA pipeline unless e8m0 block
+scaling is used), and measures power per format.
+
+TPU adaptation: the formats exist as ``ml_dtypes`` (fp4 e2m1, fp6 e2m3/e3m2,
+fp8 e4m3/e5m2, e8m0 scale).  The "which pipeline does it really use" probe
+becomes HLO inspection: does a dot in format X lower to a native dot, or to
+``convert`` -> bf16 ``dot`` (the TPU's QMMA-fallback analogue)?  Block
+scaling with e8m0 exponents (MXFP-style) is implemented and validated for
+numerics; energy per format comes from ``repro.core.energy``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+# The paper's Tab V rows (+ e8m0, which it excludes from mma operands —
+# "only used for scaling exponents", same role here).
+FORMATS: Dict[str, np.dtype] = {
+    "e2m1": np.dtype(ml_dtypes.float4_e2m1fn),    # FP4
+    "e2m3": np.dtype(ml_dtypes.float6_e2m3fn),    # FP6
+    "e3m2": np.dtype(ml_dtypes.float6_e3m2fn),    # FP6
+    "e4m3": np.dtype(ml_dtypes.float8_e4m3fn),    # FP8
+    "e5m2": np.dtype(ml_dtypes.float8_e5m2),      # FP8
+}
+SCALE_FORMAT = np.dtype(ml_dtypes.float8_e8m0fnu)
+
+# Format metadata (bits, max finite value) — Tab IV/V support matrix.
+FORMAT_INFO: Dict[str, Dict[str, float]] = {
+    "e2m1": dict(bits=4, max=6.0),
+    "e2m3": dict(bits=6, max=7.5),
+    "e3m2": dict(bits=6, max=28.0),
+    "e4m3": dict(bits=8, max=448.0),
+    "e5m2": dict(bits=8, max=57344.0),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatSupport:
+    """One Tab IV/V row: how a format actually executes on this backend."""
+
+    fmt: str
+    bits: int
+    max_finite: float
+    representable: bool           # array creation + cast round-trip works
+    native_dot: bool              # dot without explicit convert in HLO
+    lowers_via_convert: bool      # the "QMMA fallback" analogue
+    pipeline: str                 # e.g. "bf16-MXU (dequant)", "native"
+
+
+def _dot_hlo(fmt_dtype: np.dtype) -> str:
+    def f(a, b):
+        return jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    try:
+        # jnp rejects dtypes it has no lowering for (fp6 — the analogue of
+        # the paper's "PTX error without .kind::f8f6f4"): report unsupported
+        a = jnp.zeros((8, 8), dtype=fmt_dtype)
+        b = jnp.zeros((8, 8), dtype=fmt_dtype)
+        return jax.jit(f).lower(a, b).compile().as_text()
+    except Exception:
+        return ""
+
+
+def support_matrix() -> List[FormatSupport]:
+    """Enumerate what each paper format lowers to on this backend —
+    the SASS-inspection (§V.B) analogue over compiled HLO."""
+    out = []
+    for name, dt in FORMATS.items():
+        info = FORMAT_INFO[name]
+        try:
+            x = np.asarray([1.0, -0.5], dtype=dt)
+            representable = bool(
+                np.allclose(x.astype(np.float32), [1.0, -0.5]))
+        except Exception:
+            representable = False
+        hlo = _dot_hlo(dt)
+        has_dot = " dot(" in hlo or " dot." in hlo or "dot_general" in hlo
+        via_convert = "convert" in hlo
+        if not hlo:
+            pipeline = "unsupported"
+        elif via_convert:
+            pipeline = "wide-MXU (convert/dequant)"   # QMMA-fallback analogue
+        else:
+            pipeline = "native"
+        out.append(FormatSupport(
+            fmt=name,
+            bits=int(info["bits"]),
+            max_finite=info["max"],
+            representable=representable,
+            native_dot=has_dot and not via_convert,
+            lowers_via_convert=via_convert,
+            pipeline=pipeline,
+        ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Numerics: cast error + MXFP block scaling (e8m0), §V.C precision tradeoffs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CastError:
+    fmt: str
+    rel_err_mean: float
+    rel_err_max: float
+    overflow_frac: float
+
+
+def cast_error(fmt: str, x: Optional[np.ndarray] = None,
+               seed: int = 0, n: int = 1 << 14) -> CastError:
+    """Round-trip x -> fmt -> fp32 relative error on ~N(0,1) data."""
+    dt = FORMATS[fmt]
+    if x is None:
+        x = np.random.default_rng(seed).normal(size=n).astype(np.float32)
+    q = x.astype(dt).astype(np.float32)
+    finite = np.isfinite(q)
+    denom = np.maximum(np.abs(x), 1e-6)
+    rel = np.abs(q - x) / denom
+    return CastError(
+        fmt=fmt,
+        rel_err_mean=float(rel[finite].mean()) if finite.any() else np.inf,
+        rel_err_max=float(rel[finite].max()) if finite.any() else np.inf,
+        overflow_frac=float(1.0 - finite.mean()),
+    )
+
+
+def block_quantize(x: jnp.ndarray, fmt: str, block: int = 32
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MXFP-style block quantization: e8m0 power-of-two scale per block.
+
+    Returns ``(q, scales)`` with ``q`` in the target format over the last
+    axis blocked by ``block``.  This is the paper's observed OMMA path:
+    FP4/FP6 operands + ue8m0 block scales.
+    """
+    assert x.shape[-1] % block == 0, (x.shape, block)
+    dt = FORMATS[fmt]
+    fmax = FORMAT_INFO[fmt]["max"]
+    xb = x.reshape(*x.shape[:-1], x.shape[-1] // block, block)
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    # power-of-two scale (e8m0 has no mantissa): 2^ceil(log2(absmax/fmax))
+    exp = jnp.ceil(jnp.log2(jnp.maximum(absmax, 1e-30) / fmax))
+    scale = jnp.exp2(exp)
+    q = (xb / scale).astype(dt)
+    return q.reshape(x.shape), scale.squeeze(-1)
+
+
+def block_dequantize(q: jnp.ndarray, scales: jnp.ndarray, block: int = 32,
+                     out_dtype=jnp.float32) -> jnp.ndarray:
+    qb = q.astype(out_dtype).reshape(
+        *q.shape[:-1], q.shape[-1] // block, block)
+    return (qb * scales[..., None]).reshape(q.shape)
+
+
+def block_roundtrip_error(fmt: str, shape=(64, 256), block: int = 32,
+                          seed: int = 0) -> float:
+    """Mean relative error of quantize->dequantize with e8m0 block scales —
+    the numeric half of the paper's precision-tradeoff analysis."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * 4.0
+    q, s = block_quantize(x, fmt, block)
+    y = block_dequantize(q, s, block)
+    rel = jnp.abs(y - x) / jnp.maximum(jnp.abs(x), 1e-6)
+    return float(rel.mean())

@@ -1,0 +1,133 @@
+"""Three-term roofline model.
+
+The paper motivates microbenchmarking as input to roofline-style reasoning
+([2] in its bibliography); this module closes that loop for the framework:
+given a compiled dry-run artifact (``repro.core.hlo_analysis``) and a
+``DeviceModel``, produce the three roofline terms
+
+    compute    = HLO_FLOPs      / (chips x peak_FLOP/s)
+    memory     = HLO_bytes      / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw x n_links)
+
+plus the dominant bottleneck, MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE)
+and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs which exposes
+remat/redundancy waste.  These feed EXPERIMENTS.md §Roofline and the §Perf
+hillclimb loop.
+
+Note on units: ``cost_analysis()`` under SPMD reports *per-device* FLOPs and
+bytes, and the HLO text parsed for collectives is the per-device partitioned
+module — so terms are computed per device and need no further division by
+chip count.  ``chips`` is retained for the MFU-style aggregate numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.device_model import DeviceModel
+from repro.core.hlo_analysis import CompiledStats
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineReport:
+    cell: str                    # "<arch>/<shape>/<mesh>"
+    chips: int
+    dtype: str
+    # raw inputs (per device)
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    # the three terms, in seconds (per step, per device)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # analysis
+    dominant: str                # "compute" | "memory" | "collective"
+    bound_s: float               # max of the three == predicted step floor
+    model_flops: float           # 6*N(_active)*D, whole step, all chips
+    useful_ratio: float          # model_flops / (hlo_flops * chips)
+    roofline_fraction: float     # compute_s / bound_s  (1.0 == compute-bound)
+    mfu: float                   # model_flops / (bound_s * chips * peak)
+    per_device_memory_bytes: int
+    notes: str = ""
+
+    def terms(self) -> Dict[str, float]:
+        return {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+
+
+def build_report(
+    cell: str,
+    stats: CompiledStats,
+    device: DeviceModel,
+    chips: int,
+    dtype: str = "bfloat16",
+    model_flops: float = 0.0,
+    notes: str = "",
+) -> RooflineReport:
+    peak = device.peak_flops_for(dtype)
+    hbm_bw = device.hbm.bandwidth_Bps
+    ici_bw = max(device.link_Bps * max(device.num_links, 1), 1.0)
+
+    compute_s = stats.flops / peak if peak else 0.0
+    memory_s = stats.bytes_accessed / hbm_bw if hbm_bw else 0.0
+    collective_s = stats.collectives.total_bytes / ici_bw
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)  # type: ignore[arg-type]
+    bound_s = terms[dominant]
+
+    total_hlo_flops = stats.flops * chips
+    useful = model_flops / total_hlo_flops if total_hlo_flops else 0.0
+    mfu = (model_flops / (bound_s * chips * peak)
+           if bound_s > 0 and peak else 0.0)
+
+    return RooflineReport(
+        cell=cell,
+        chips=chips,
+        dtype=dtype,
+        hlo_flops=stats.flops,
+        hlo_bytes=stats.bytes_accessed,
+        collective_bytes=stats.collectives.total_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        bound_s=bound_s,
+        model_flops=model_flops,
+        useful_ratio=useful,
+        roofline_fraction=compute_s / bound_s if bound_s else 0.0,
+        mfu=mfu,
+        per_device_memory_bytes=stats.per_device_bytes,
+        notes=notes,
+    )
+
+
+def model_flops_dense(n_params: float, tokens: float) -> float:
+    """Kaplan 6*N*D for one training step over ``tokens`` tokens."""
+    return 6.0 * n_params * tokens
+
+
+def model_flops_forward(n_params: float, tokens: float) -> float:
+    """2*N*D — forward-only (serving) useful FLOPs."""
+    return 2.0 * n_params * tokens
+
+
+def markdown_row(r: RooflineReport) -> str:
+    return (
+        f"| {r.cell} | {r.hlo_flops:.3e} | {r.hlo_bytes:.3e} | "
+        f"{r.collective_bytes:.3e} | {r.compute_s*1e3:.3f} | "
+        f"{r.memory_s*1e3:.3f} | {r.collective_s*1e3:.3f} | "
+        f"**{r.dominant}** | {r.useful_ratio:.2f} | {r.mfu:.3f} | "
+        f"{r.per_device_memory_bytes/2**30:.2f} |"
+    )
+
+
+MARKDOWN_HEADER = (
+    "| cell | HLO FLOPs/dev | HLO bytes/dev | coll bytes/dev | "
+    "compute (ms) | memory (ms) | collective (ms) | dominant | "
+    "useful | MFU@bound | mem GiB/dev |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|"
+)

@@ -1,0 +1,137 @@
+"""Timing infrastructure — the §IV.A "clock overhead" layer.
+
+The paper measures clock cycles with ``%clock64`` and first characterizes the
+overhead of the measurement itself (1 cycle on GB203, 2 on GH100) before
+trusting any number.  TPUs (and CPUs via JAX) expose no user-readable cycle
+counter inside a kernel, so the framework measures wall time around
+``block_until_ready`` and applies the identical discipline:
+
+* measure the timer's own overhead first and subtract it,
+* discard warm-up iterations (the paper excludes first-run results where the
+  cache had not warmed up — §IV.B),
+* report medians over many repetitions, plus spread.
+
+All probes in ``repro.core.probes`` go through :func:`time_fn`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import statistics
+import time
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingResult:
+    """Statistics of a timed region, in seconds (overhead already removed)."""
+
+    median_s: float
+    mean_s: float
+    min_s: float
+    std_s: float
+    iters: int
+    warmup: int
+    overhead_s: float
+    samples: tuple = ()
+
+    def per(self, n: int) -> float:
+        """Median time per inner operation when the region ran ``n`` ops."""
+        return self.median_s / max(n, 1)
+
+    @property
+    def median_us(self) -> float:
+        return self.median_s * 1e6
+
+    @property
+    def median_ns(self) -> float:
+        return self.median_s * 1e9
+
+
+def measure_timer_overhead(reps: int = 1000) -> float:
+    """§IV.A analogue: cost of an empty timed region.
+
+    On the GPUs the paper reports 1 (GB203) vs 2 (GH100) cycles for two
+    back-to-back ``%clock64`` reads; here it is two ``perf_counter`` calls.
+    """
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        t1 = time.perf_counter()
+        samples.append(t1 - t0)
+    return statistics.median(samples)
+
+
+_TIMER_OVERHEAD: Optional[float] = None
+
+
+def timer_overhead() -> float:
+    global _TIMER_OVERHEAD
+    if _TIMER_OVERHEAD is None:
+        _TIMER_OVERHEAD = measure_timer_overhead()
+    return _TIMER_OVERHEAD
+
+
+def _block(x: Any) -> None:
+    jax.block_until_ready(x)
+
+
+def time_fn(
+    fn: Callable[..., Any],
+    *args: Any,
+    iters: int = 30,
+    warmup: int = 3,
+    keep_samples: bool = False,
+) -> TimingResult:
+    """Time ``fn(*args)`` with warm-up exclusion and overhead subtraction.
+
+    ``fn`` should already be jit-compiled; the warm-up iterations absorb
+    compilation and cache warm-up (the effect the paper observed as inflated
+    first-run latencies on GB203, §IV.B).
+    """
+    ovh = timer_overhead()
+    for _ in range(warmup):
+        _block(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _block(fn(*args))
+        t1 = time.perf_counter()
+        samples.append(max(t1 - t0 - ovh, 0.0))
+    return TimingResult(
+        median_s=statistics.median(samples),
+        mean_s=statistics.fmean(samples),
+        min_s=min(samples),
+        std_s=statistics.pstdev(samples) if len(samples) > 1 else 0.0,
+        iters=iters,
+        warmup=warmup,
+        overhead_s=ovh,
+        samples=tuple(samples) if keep_samples else (),
+    )
+
+
+def to_cycles(seconds: float, clock_hz: float) -> float:
+    """Convert wall seconds to the paper's unit (clock cycles)."""
+    return seconds * clock_hz
+
+
+def amortized_ns(total: TimingResult, baseline: TimingResult, n: int) -> float:
+    """Per-op time of the *increment* between two regions.
+
+    Used by chain-length sweeps: ``(T(chain=n) - T(chain=0)) / n`` isolates
+    the dependent-op latency from dispatch overhead, mirroring how the paper
+    subtracts the empty-measurement cost.
+    """
+    if n <= 0:
+        return 0.0
+    return max(total.median_s - baseline.median_s, 0.0) / n * 1e9
+
+
+def geomean(xs: Sequence[float]) -> float:
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return 0.0
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))

@@ -1,0 +1,8 @@
+"""Data pipeline: deterministic synthetic LM streams + packing."""
+
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticConfig,
+    SyntheticStream,
+    make_stream,
+)
+from repro.data.packing import pack_documents  # noqa: F401

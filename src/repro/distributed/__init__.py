@@ -1,0 +1,24 @@
+"""Distribution layer: sharding rules, compressed collectives, elasticity."""
+
+from repro.distributed.sharding import (  # noqa: F401
+    axis_size,
+    batch_specs,
+    cache_specs,
+    dp_axes,
+    named,
+    param_shardings,
+    param_specs,
+    spec_local_bytes,
+)
+from repro.distributed.compression import (  # noqa: F401
+    compressed_psum,
+    compressed_psum_tree,
+    quantize,
+    stochastic_round,
+)
+from repro.distributed.elastic import (  # noqa: F401
+    Heartbeat,
+    StepWatchdog,
+    StragglerEvent,
+    remesh,
+)

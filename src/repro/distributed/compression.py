@@ -1,0 +1,76 @@
+"""Gradient compression — int8 stochastic-rounding all-reduce.
+
+Beyond-paper distributed-optimization trick, directly motivated by the
+paper's §V.C finding (energy and bandwidth scale down with precision:
+FP4 16.8 W < FP6 ~39 W < FP8 ~47 W at iso-work): the DP gradient
+all-reduce is the dominant *collective* term for small-model/large-mesh
+cells, and its payload tolerates 8-bit quantization when rounding is
+unbiased.
+
+Scheme (used by the shard_map DP trainer, ``repro.train.local_dp``):
+  1. global scale  = pmax(|g|_inf) / qmax          (tiny scalar collective)
+  2. q = stochastic_round(g / scale)  in int8 range
+  3. psum(q) accumulated in int16/int32 (qmax chosen so the sum of
+     ``world`` shards cannot overflow)
+  4. g_hat = q_sum * scale / world
+
+Wire bytes: 2 B/element (int16) vs 4 B fp32 — 2x reduction; unbiased:
+E[q] = g/scale exactly (property-tested in tests/test_compression.py).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def stochastic_round(x: jax.Array, key: jax.Array) -> jax.Array:
+    """Unbiased randomized rounding to the nearest integers."""
+    floor = jnp.floor(x)
+    frac = x - floor
+    return floor + (jax.random.uniform(key, x.shape) < frac)
+
+
+def quantize(g: jax.Array, key: jax.Array, qmax: int
+             ) -> Tuple[jax.Array, jax.Array]:
+    """(int8 payload, fp32 scale); stochastic rounding keeps E[deq] = g."""
+    scale = jnp.max(jnp.abs(g)).astype(jnp.float32) / qmax
+    scale = jnp.maximum(scale, 1e-30)
+    q = stochastic_round(g.astype(jnp.float32) / scale, key)
+    return jnp.clip(q, -qmax, qmax).astype(jnp.int8), scale
+
+
+def compressed_psum(g: jax.Array, key: jax.Array, axis_name: str,
+                    world: int) -> jax.Array:
+    """Mean of ``g`` over ``axis_name`` with an int8-quantized payload.
+
+    Must run inside shard_map/pmap with ``axis_name`` bound.  ``qmax`` is
+    chosen so ``world * qmax`` fits the int16 accumulator.  Scales are
+    per-row (leading dim) for matrices — a per-tensor scale lets one
+    outlier (embedding rows) flush every other gradient to zero, which
+    measurably stalls training (tests/test_compression.py).
+    """
+    qmax = min(127, max(1, 32767 // max(world, 1)))
+    gf = g.astype(jnp.float32)
+    if g.ndim >= 2:
+        axes = tuple(range(1, g.ndim))
+        local_scale = jnp.max(jnp.abs(gf), axis=axes, keepdims=True) / qmax
+    else:
+        local_scale = jnp.max(jnp.abs(gf)) / qmax
+    scale = jax.lax.pmax(jnp.maximum(local_scale, 1e-30), axis_name)
+    q = stochastic_round(gf / scale, key)
+    q = jnp.clip(q, -qmax, qmax).astype(jnp.int16)
+    q_sum = jax.lax.psum(q, axis_name)
+    return (q_sum.astype(jnp.float32) * scale / world).astype(g.dtype)
+
+
+def compressed_psum_tree(grads: Any, key: jax.Array, axis_name: str,
+                         world: int) -> Any:
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = [compressed_psum(g, k, axis_name, world)
+           for g, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,131 @@
+"""Elasticity + straggler mitigation.
+
+A 1000+-node job WILL lose nodes mid-run; the framework's posture:
+
+* **Elastic re-mesh** — checkpoints store logical PartitionSpecs (not
+  device layouts).  :func:`remesh` re-shards any pytree onto a *different*
+  mesh shape deterministically, so a job that lost a pod restarts on the
+  surviving 16x16 slice from the same checkpoint (exercised by
+  tests/test_checkpoint.py on 1->N fake devices).
+
+* **Straggler watchdog** — :class:`StepWatchdog` tracks a rolling median
+  of step times; a step exceeding ``deadline_factor`` x median raises a
+  straggler event.  On real pods the registered callback triggers
+  checkpoint-and-reschedule (here: log + count, and the train loop's
+  snapshot path is the tested part).
+
+* **Heartbeat** — :class:`Heartbeat` is the per-process liveness file
+  (mtime-updated every step); an external supervisor restarts ranks whose
+  heartbeat goes stale.  File-based so it works on any cluster manager.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import statistics
+import time
+from typing import Any, Callable, List, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def remesh(tree: Any, specs: Any, new_mesh: Mesh) -> Any:
+    """Re-shard ``tree`` onto ``new_mesh`` using its logical ``specs``.
+
+    Divisibility degradation is re-evaluated for the new mesh: a spec axis
+    that no longer divides is dropped to replication (the same fallback
+    rule the original sharding used).
+    """
+    def place(x, spec):
+        axes = []
+        for dim, ax in zip(x.shape, tuple(spec) + (None,) * 99):
+            if ax is None:
+                axes.append(None)
+                continue
+            names = (ax,) if isinstance(ax, str) else tuple(ax)
+            names = tuple(a for a in names if a in new_mesh.axis_names)
+            size = 1
+            for a in names:
+                size *= new_mesh.shape[a]
+            axes.append(names if names and dim % size == 0 else None)
+        spec2 = PartitionSpec(*[a if not isinstance(a, tuple) or len(a) > 1
+                                else a[0] for a in axes])
+        return jax.device_put(x, NamedSharding(new_mesh, spec2))
+
+    return jax.tree.map(place, tree, specs,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration_s: float
+    median_s: float
+
+
+class StepWatchdog:
+    """Rolling-median step-time monitor with a deadline callback."""
+
+    def __init__(self, deadline_factor: float = 3.0, window: int = 32,
+                 on_straggler: Optional[Callable[[StragglerEvent], None]]
+                 = None):
+        self.deadline_factor = deadline_factor
+        self.window = window
+        self.on_straggler = on_straggler
+        self.durations: List[float] = []
+        self.events: List[StragglerEvent] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def start_step(self, step: int) -> None:
+        self._step = step
+        self._t0 = time.perf_counter()
+
+    def end_step(self) -> Optional[StragglerEvent]:
+        assert self._t0 is not None, "end_step without start_step"
+        dur = time.perf_counter() - self._t0
+        self._t0 = None
+        event = None
+        if len(self.durations) >= 4:
+            med = statistics.median(self.durations[-self.window:])
+            if dur > self.deadline_factor * med:
+                event = StragglerEvent(self._step, dur, med)
+                self.events.append(event)
+                if self.on_straggler:
+                    self.on_straggler(event)
+        self.durations.append(dur)
+        return event
+
+    @property
+    def median_s(self) -> float:
+        return statistics.median(self.durations) if self.durations else 0.0
+
+
+class Heartbeat:
+    """Liveness file touched every step; supervisors watch its mtime."""
+
+    def __init__(self, path: str, process_index: Optional[int] = None):
+        pid = (jax.process_index() if process_index is None
+               else process_index)
+        self.path = os.path.join(path, f"heartbeat.{pid}")
+        os.makedirs(path, exist_ok=True)
+
+    def beat(self, step: int) -> None:
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(f"{step} {time.time()}\n")
+        os.replace(tmp, self.path)
+
+    def last(self) -> Optional[tuple]:
+        try:
+            with open(self.path) as f:
+                step, ts = f.read().split()
+            return int(step), float(ts)
+        except (FileNotFoundError, ValueError):
+            return None
+
+    def stale(self, timeout_s: float) -> bool:
+        last = self.last()
+        return last is None or (time.time() - last[1]) > timeout_s

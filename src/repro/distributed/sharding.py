@@ -1,0 +1,258 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs for the
+production meshes.
+
+Parallelism map (DESIGN.md §6):
+  * DP   — batch on ('pod', 'data')
+  * TP   — heads / d_ff / d_inner / vocab on 'model'
+  * EP   — MoE expert dim on 'model'
+  * FSDP — for cfg.fsdp archs (>=52B), parameter d_model dims additionally
+           sharded over ('pod', 'data'); XLA all-gathers just-in-time
+  * SP   — long-context decode (batch < dp size): KV-cache sequence dim
+           sharded on 'data' (flash-decoding-style partial softmax; XLA
+           inserts the combine)
+
+Every rule degrades gracefully: a dim that is not divisible by its mesh
+axis is replicated instead (e.g. kv_heads=8 on model=16 — the standard
+Megatron MQA/GQA fallback).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+# --------------------------------------------------------------------- #
+# Mesh helpers
+# --------------------------------------------------------------------- #
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _maybe(mesh: Mesh, dim: int, axes) -> Optional[Any]:
+    """axes if dim divides evenly over them, else None (replicate)."""
+    if axes is None or dim <= 0:
+        return None
+    size = axis_size(mesh, axes)
+    if size > 1 and dim % size == 0:
+        return axes if isinstance(axes, str) else tuple(axes)
+    return None
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# --------------------------------------------------------------------- #
+# Parameter specs
+# --------------------------------------------------------------------- #
+
+def _param_rule(names: Sequence[str], shape: Tuple[int, ...],
+                cfg: ArchConfig, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path."""
+    fsdp = dp_axes(mesh) if cfg.fsdp else None
+    name = names[-1]
+    stacked = "layers" in names[:2]         # scanned: leading period dim
+
+    def f(dim):                             # fsdp placement for this dim
+        return _maybe(mesh, dim, fsdp)
+
+    def m(dim):
+        return _maybe(mesh, dim, "model")
+
+    def f_dp(dim, heads):
+        """d_model placement for attention weights: FSDP axes when
+        enabled; otherwise fall back to the data axes WHEN the head dim
+        cannot shard on 'model' (24 q-heads / 8 kv-heads on a 16-way
+        model axis) — leaving those weights fully replicated costs
+        n_layers fp32 gradient copies per device (measured +20 GiB on
+        llama3.2 train; EXPERIMENTS.md §Perf)."""
+        if fsdp:
+            return _maybe(mesh, dim, fsdp)
+        if m(heads) is None:
+            return _maybe(mesh, dim, dp_axes(mesh))
+        return None
+
+    base: Tuple = ()
+    if name == "embed":
+        base = (m(shape[0]), f(shape[1]))
+    elif name == "unembed":
+        base = (f(shape[0]), m(shape[1]))
+    elif name in ("final_norm", "gate_norm") or name.startswith("ln_"):
+        core = shape[1:] if stacked else shape
+        base = tuple(None for _ in core)
+    elif name == "wq":
+        base = (f_dp(shape[-3], shape[-2]), m(shape[-2]), None)
+    elif name in ("wk", "wv"):
+        base = (f_dp(shape[-3], shape[-2]), m(shape[-2]), None)
+    elif name == "wo":
+        base = (m(shape[-3]), None, f_dp(shape[-1], shape[-3]))
+    elif name in ("bq", "bk", "bv"):
+        base = (m(shape[-2]), None)
+    elif name in ("w1", "w3"):
+        if len(shape) - (1 if stacked else 0) == 3:   # MoE (E, D, F)
+            # EP on 'model' + FSDP on the *d_ff* dim: sharding d_model
+            # would force a full weight all-gather per microbatch
+            # (measured ~2 TB/device/step on kimi train); d_ff sharding
+            # replaces it with an activation psum (§Perf iteration)
+            base = (m(shape[-3]), None, f(shape[-1]))
+        else:                                          # dense (D, F)
+            base = (f(shape[-2]), m(shape[-1]))
+    elif name == "w2":
+        if len(shape) - (1 if stacked else 0) == 3:   # MoE (E, F, D)
+            base = (m(shape[-3]), f(shape[-2]), None)
+        else:                                          # dense (F, D)
+            base = (m(shape[-2]), f(shape[-1]))
+    elif name == "router":
+        base = (None, None)
+    elif name in ("wz", "wx"):
+        base = (f(shape[-2]), m(shape[-1]))
+    elif name in ("wb", "wc"):
+        base = (f(shape[-2]), None)
+    elif name == "wdt":
+        base = (f(shape[-2]), m(shape[-1]))
+    elif name in ("conv_x_w",):
+        base = (m(shape[-2]), None)
+    elif name in ("conv_x_b",):
+        base = (m(shape[-1]),)
+    elif name in ("conv_b_w", "conv_c_w"):
+        base = (None, None)
+    elif name in ("conv_b_b", "conv_c_b"):
+        base = (None,)
+    elif name in ("A_log", "dt_bias", "D"):
+        base = (m(shape[-1]),)
+    elif name == "out_proj":
+        base = (m(shape[-2]), f(shape[-1]))
+    elif name == "in_proj":
+        base = (f(shape[-2]), None)
+    else:
+        base = tuple(None for _ in (shape[1:] if stacked else shape))
+    if stacked:
+        base = (None,) + tuple(base)
+    assert len(base) == len(shape), (names, shape, base)
+    return P(*base)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, params_shapes) -> Any:
+    """PartitionSpec tree matching ``params_shapes`` (eval_shape output)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_rule(_path_names(path), leaf.shape,
+                                       cfg, mesh),
+        params_shapes)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, params_shapes) -> Any:
+    return jax.tree.map(lambda s: named(mesh, s),
+                        param_specs(cfg, mesh, params_shapes))
+
+
+# --------------------------------------------------------------------- #
+# Batch / cache specs
+# --------------------------------------------------------------------- #
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                fields: Dict[str, Tuple[tuple, str]]) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    out = {}
+    for fname, (shp, _) in fields.items():
+        b_axis = _maybe(mesh, shp[0], dp)
+        out[fname] = P(b_axis, *(None for _ in shp[1:]))
+    return out
+
+
+def _kv_seq_axes(mesh: Mesh, batch: int, seq: int, heads: int):
+    """(batch_axes, seq_axes, head_axes) for a KV-cache leaf.
+
+    Axes the batch/head dims cannot absorb fall through to the sequence
+    dim (flash-decoding-style sequence-parallel KV): GQA kv_heads=8 on a
+    16-way 'model' axis would otherwise replicate the cache 16x — the
+    dominant decode_32k memory blowup found in the first dry-run sweep
+    (EXPERIMENTS.md §Perf)."""
+    dp = dp_axes(mesh)
+    b = _maybe(mesh, batch, dp)
+    h = _maybe(mesh, heads, "model")
+    spill = []
+    if b is None:
+        spill.extend(dp)
+    if h is None:
+        spill.append("model")
+    s = _maybe(mesh, seq, tuple(spill)) if spill else None
+    return b, s, h
+
+
+def cache_rule(names: Sequence[str], shape: Tuple[int, ...],
+               cfg: ArchConfig, mesh: Mesh) -> P:
+    """Spec for a decode-cache leaf (leading dim = period stack except
+    enc_out)."""
+    dp = dp_axes(mesh)
+    name = names[-1]
+    if name == "enc_out":
+        b = _maybe(mesh, shape[0], dp)
+        return P(b, None, None)
+    # all other leaves are period-stacked: shape[0] = n_periods
+    batch = shape[1]
+    if name in ("k", "v"):
+        b, s, h = _kv_seq_axes(mesh, batch, shape[2], shape[3])
+        return P(None, b, s, h, None)
+    if name == "slot_pos":
+        b, s, _ = _kv_seq_axes(mesh, batch, shape[2], cfg.n_kv_heads)
+        return P(None, b, s)
+    b = _maybe(mesh, batch, dp)
+    if name == "conv":
+        return P(None, b, None, None)
+    if name == "state":
+        heads = _maybe(mesh, shape[2], "model")
+        return P(None, b, heads, None, None)
+    return P(*(None for _ in shape))
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, cache_shapes) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_rule(_path_names(path), leaf.shape,
+                                      cfg, mesh),
+        cache_shapes)
+
+
+# --------------------------------------------------------------------- #
+# Sizing report (used by the dry-run and tests)
+# --------------------------------------------------------------------- #
+
+def spec_local_bytes(shapes_tree, specs_tree, mesh: Mesh) -> int:
+    """Per-device bytes of a sharded pytree (exact, from specs)."""
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(shapes_tree),
+                          jax.tree.leaves(specs_tree,
+                                          is_leaf=lambda x: isinstance(x, P))):
+        n = leaf.dtype.itemsize
+        for dim, axes in zip(leaf.shape, tuple(spec) + (None,) * 99):
+            div = axis_size(mesh, axes) if axes else 1
+            n *= math.ceil(dim / div)
+        total += n
+    return total

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; Mosaic on TPU).
+
+Compute hot-spots: flash_attention, ssd_scan, qmatmul.
+Probe kernels (the paper's methodology): probe_mma, probe_chase,
+probe_dep_chain.  Public API in ``repro.kernels.ops``; oracles in
+``repro.kernels.ref``.
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    chase,
+    dep_chain,
+    flash_attention,
+    flash_decode,
+    make_chase_buffer,
+    mma_probe,
+    qmatmul,
+    quantize_for_qmatmul,
+    ssd_scan,
+)

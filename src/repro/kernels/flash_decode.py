@@ -1,0 +1,129 @@
+"""Flash-decoding, TPU Pallas — single-token attention against a (ring)
+KV cache.
+
+The serving hot path (decode_32k / long_500k cells): one query row
+attends to S cached positions.  The XLA path materializes the (1, S)
+score row per head in HBM; this kernel streams KV blocks through VMEM
+with the m/l/acc partial-softmax state in scratch — HBM traffic is the
+KV read itself (the roofline floor), which is why the fp8-KV lever
+(§Perf iter 3) composes: the dequant happens in VMEM on the way in.
+
+Grid (batch*q_heads, S/bk), KV-block dim innermost/arbitrary.  Ring-cache
+semantics match ``repro.models.attention.decode_attention`` (the oracle):
+slot visibility = 0 <= slot_pos <= pos (and > pos - window for local
+layers).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, sp_ref, o_ref,
+            m_scr, l_scr, acc_scr, *,
+            bk: int, window: Optional[int], softcap: Optional[float],
+            scale: float):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (1, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+    slot_pos = sp_ref[0]                              # (bk,) int32
+    pos = pos_ref[0]                                  # () int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    ok = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        ok &= slot_pos > pos - window
+    s = jnp.where(ok[None, :], s, NEG_INF)            # (1, bk)
+
+    m_prev = m_scr[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * corr[:, None] + jnp.sum(p, axis=1,
+                                                      keepdims=True)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot(p, v,
+                                  preferred_element_type=jnp.float32))
+    m_scr[...] = m_new[:, None]
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode_bhd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     slot_pos: jax.Array, pos: jax.Array, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     scale: Optional[float] = None,
+                     bk: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q (b, hq, d); k/v cache (b, hkv, S, d); slot_pos (b, S) int32;
+    pos (b,) int32 -> (b, hq, d).  S padded to bk (empty slots carry
+    slot_pos = -1 and mask out)."""
+    b, hq, d = q.shape
+    hkv, S = k_cache.shape[1], k_cache.shape[2]
+    ratio = hq // hkv
+    pad = (-S) % bk
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        slot_pos = jnp.pad(slot_pos, ((0, 0), (0, pad)),
+                           constant_values=-1)
+    S_pad = S + pad
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    qf = q.reshape(b * hq, 1, d)
+    kf = k_cache.reshape(b * hkv, S_pad, d)
+    vf = v_cache.reshape(b * hkv, S_pad, d)
+
+    def kv_index(g, j):
+        return (g // hq) * hkv + (g % hq) // ratio, j, 0
+
+    kernel = functools.partial(_kernel, bk=bk, window=window,
+                               softcap=softcap, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, S_pad // bk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda g, j: (g // hq,)),        # pos
+            pl.BlockSpec((1, 1, d), lambda g, j: (g, 0, 0)),    # q
+            pl.BlockSpec((1, bk, d), kv_index),                 # k
+            pl.BlockSpec((1, bk, d), kv_index),                 # v
+            pl.BlockSpec((1, bk), lambda g, j: (g // hq, j)),   # slot_pos
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda g, j: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qf, kf, vf, slot_pos)
+    return out.reshape(b, hq, d)

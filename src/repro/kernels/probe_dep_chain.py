@@ -1,0 +1,59 @@
+"""Dependency-chain compute probe, TPU Pallas — the paper's §IV.B/§IV.D.
+
+The paper measures *true latency* with a serialized dependent chain
+(``mad.lo.s32`` r1 <- r1*r2+r3) and *completion latency* with independent
+chains.  TPU adaptation (DESIGN.md §3): a VREG-resident (8, 128) tile is
+carried through ``chain_len`` fused-multiply-adds inside a ``fori_loop``;
+``ilp`` independent tiles interleave to expose instruction-level
+parallelism to the VPU — the exact true-vs-completion axis, with warps
+replaced by grid programs.
+
+On a real TPU the wall-time slope over ``chain_len`` gives cycles/op; in
+interpret mode the kernel is validated against the closed form
+(x * a^n + b * (a^n - 1)/(a - 1)).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE = (8, 128)
+
+
+def _kernel(x_ref, o_ref, *, chain_len: int, ilp: int, a: float, b: float):
+    def body(_, carry):
+        return tuple(c * a + b for c in carry)
+
+    tiles = tuple(x_ref[i] for i in range(ilp))
+    tiles = jax.lax.fori_loop(0, chain_len, body, tiles)
+    for i in range(ilp):
+        o_ref[i] = tiles[i]
+
+
+def dep_chain(x: jax.Array, chain_len: int, ilp: int = 1,
+              a: float = 1.0001, b: float = 0.5,
+              interpret: bool = False) -> jax.Array:
+    """x (ilp, 8, 128) fp32 -> same shape after ``chain_len`` serial FMAs
+    per tile (tiles are mutually independent => ILP axis)."""
+    assert x.shape == (ilp,) + TILE
+    kernel = functools.partial(_kernel, chain_len=chain_len, ilp=ilp,
+                               a=a, b=b)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec(x.shape, lambda: (0, 0, 0))],
+        out_specs=pl.BlockSpec(x.shape, lambda: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def dep_chain_closed_form(x: jax.Array, chain_len: int,
+                          a: float = 1.0001, b: float = 0.5) -> jax.Array:
+    """Oracle: x*a^n + b*(a^n-1)/(a-1)."""
+    an = a ** chain_len
+    return x * an + b * (an - 1.0) / (a - 1.0)

@@ -1,0 +1,66 @@
+"""MXU tile-sweep probe, TPU Pallas — the paper's §V.B/§V.D (Fig 4/5).
+
+The paper sweeps ``mma`` tile shapes and (warps x ILP) to find the
+throughput/latency surface of the tensor core.  TPU adaptation
+(DESIGN.md §3): the MXU's native tile is 128x128; the probe runs a blocked
+matmul whose BlockSpec tile (bm, bn, bk) is the swept axis — misaligned
+(non-multiple-of-128) tiles expose padding waste, exactly the paper's
+operand-staging story — and ``ilp`` independent fp32 accumulators per grid
+step expose the MXU pipeline depth (the paper's ILP axis; grid programs
+play the role of warps).
+
+Validated against jnp.dot in interpret mode; on a real TPU the wall-time
+sweep is benchmarks/fig4_5_matmul.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, y_ref, o_ref, acc, *, ilp: int, bm: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    # ilp independent (bm, bk) x (bk, bn) products per step — separate
+    # accumulator slices, no cross-dependency (the ILP axis)
+    for t in range(ilp):
+        x_t = x_ref[t]                                # (bm, bk)
+        acc[t] += jax.lax.dot(x_t, y_ref[...],
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+def mma_probe(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
+              bk: int = 128, ilp: int = 1,
+              interpret: bool = False) -> jax.Array:
+    """x (ilp, m, k) @ y (k, n) -> (ilp, m, n), blocked (bm, bn, bk)."""
+    ilp_, m, k = x.shape
+    n = y.shape[1]
+    assert ilp_ == ilp and m % bm == 0 and n % bn == 0 and k % bk == 0
+    kernel = functools.partial(_kernel, ilp=ilp, bm=bm)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((ilp, bm, bk), lambda i, j, kk: (0, i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((ilp, bm, bn), lambda i, j, kk: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((ilp, m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ilp, bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,76 @@
+"""Block-scaled low-precision matmul (qmatmul), TPU Pallas.
+
+The paper's §V.B subject adapted to TPU (DESIGN.md §3): v5e's MXU has no
+FP8/FP6/FP4 pipeline (the paper's own observation that FP4 mma falls back
+to the QMMA/FP8 pipeline is the same story one step earlier), so low
+precision on TPU is a *storage* format: weights stay quantized in HBM
+with e8m0 (power-of-two) block scales — mxfp-style, 32 elements/scale —
+and are dequantized to bf16 *inside the kernel*, in VMEM, on the way into
+the MXU.  HBM weight traffic drops ~2x (fp8) to ~4x (fp4, with true bit
+packing; here 1 B/elem containers, documented).
+
+Layout: x (m, k) bf16; qw (n, k) quantized along k; scales (n, k/32) fp32
+(power-of-two values = e8m0 content).  Grid (m/bm, n/bn, k/bk), k
+innermost/arbitrary with an fp32 VMEM accumulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.serve.quant import BLOCK
+
+
+def _kernel(x_ref, qw_ref, s_ref, o_ref, acc, *, bk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    x = x_ref[...].astype(jnp.float32)                 # (bm, bk)
+    qw = qw_ref[...].astype(jnp.float32)               # (bn, bk)
+    sc = s_ref[...]                                    # (bn, bk/32)
+    bn = qw.shape[0]
+    w = (qw.reshape(bn, bk // BLOCK, BLOCK) * sc[..., None]
+         ).reshape(bn, bk)
+    acc[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+def qmatmul_mkn(x: jax.Array, qw: jax.Array, scales: jax.Array, *,
+                bm: int = 128, bn: int = 128, bk: int = 128,
+                out_dtype=jnp.bfloat16,
+                interpret: bool = False) -> jax.Array:
+    """x (m, k) @ dequant(qw (n, k), scales (n, k/32)).T -> (m, n)."""
+    m, k = x.shape
+    n = qw.shape[0]
+    assert qw.shape == (n, k) and scales.shape == (n, k // BLOCK)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k)
+    assert bk % BLOCK == 0
+    kernel = functools.partial(_kernel, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // BLOCK), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, qw, scales)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import full_attention
+from repro.models.ssm import ssd_chunked, ssd_reference
+from repro.serve.quant import dequantize_blockwise
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """O(s^2)-memory attention (repro.models.attention.full_attention)."""
+    return full_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, scale=scale)
+
+
+def ssd_ref(x: jax.Array, dt_a: jax.Array, b: jax.Array, c: jax.Array,
+            sequential: bool = False
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Chunk-parallel (default) or strictly-sequential SSD oracle.
+    Model layout: x (bt, s, h, p)."""
+    if sequential:
+        return ssd_reference(x, dt_a, b, c)
+    return ssd_chunked(x, dt_a, b, c, chunk=min(64, x.shape[1]))
+
+
+def qmatmul_ref(x: jax.Array, qw: jax.Array, scales: jax.Array
+                ) -> jax.Array:
+    """Dequantize fully, then dense matmul (fp32 accumulation)."""
+    w = dequantize_blockwise(qw, scales, jnp.float32)   # (n, k)
+    return jnp.dot(x.astype(jnp.float32), w.T).astype(jnp.bfloat16)
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Oracle for probe_mma: batched x (ilp, m, k) @ y (k, n)."""
+    return jnp.einsum("tmk,kn->tmn", x.astype(jnp.float32),
+                      y.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,101 @@
+"""Mamba-2 SSD chunked scan, TPU Pallas.
+
+The SSD hot loop (DESIGN.md §4): per (batch, head) the sequence is
+processed chunk-by-chunk; each chunk does three MXU-shaped products
+(C@B^T, masked-decay quadratic @ x, C @ state) entirely in VMEM while the
+(p x n) running state lives in fp32 scratch across the sequential chunk
+grid dimension.  HBM traffic is O(s*(p+n)) — the recurrent state never
+round-trips.
+
+Grid: (b, h, s/q), KV-chunk dim innermost + arbitrary.  Inputs are
+pre-discretized (x*dt, dt*A) by ``ops.ssd_scan`` — matching the pure-jnp
+twin ``repro.models.ssm.ssd_chunked`` (the oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_ref, s_scr, *,
+            q: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)               # (q, p)
+    a = a_ref[0, 0].astype(jnp.float32)               # (q,)
+    bm = b_ref[0].astype(jnp.float32)                 # (q, n)
+    cm = c_ref[0].astype(jnp.float32)                 # (q, n)
+
+    acs = jnp.cumsum(a)                               # (q,)
+    seg = acs[:, None] - acs[None, :]
+    tril = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    el = jnp.where(tril, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y_diag = jax.lax.dot(scores * el, x,
+                         preferred_element_type=jnp.float32)
+    # contribution of the state entering this chunk
+    state = s_scr[...]                                # (p, n)
+    y_off = jax.lax.dot_general(cm, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0, 0] = (y_diag + y_off * jnp.exp(acs)[:, None]).astype(
+        y_ref.dtype)
+    # state update: decay whole chunk + inject chunk inputs
+    decay_out = jnp.exp(acs[-1] - acs)                # (q,)
+    inj = jax.lax.dot_general(x, bm * decay_out[:, None],
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (p,n)
+    s_scr[...] = state * jnp.exp(acs[-1]) + inj
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        state_ref[0, 0] = s_scr[...]
+
+
+def ssd_scan_bhsp(x_disc: jax.Array, dt_a: jax.Array, b: jax.Array,
+                  c: jax.Array, chunk: int = 256,
+                  interpret: bool = False):
+    """x_disc (bt, h, s, p) = x*dt;  dt_a (bt, h, s);  b, c (bt, s, n).
+
+    Returns (y (bt, h, s, p) at x dtype, final_state (bt, h, p, n) fp32).
+    s must be a multiple of ``chunk`` (ops pads identically to the jnp
+    twin: dt_a=0 / x=0 tail is an exact identity).
+    """
+    bt, h, s, p = x_disc.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    kernel = functools.partial(_kernel, q=chunk)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(bt, h, s // chunk),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt, h, s, p), x_disc.dtype),
+            jax.ShapeDtypeStruct((bt, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_disc, dt_a, b, c)
+    return y, state

@@ -1,0 +1,49 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+``--xla_force_host_platform_device_count=512`` before first jax init.
+
+Axes:
+  single-pod : (16, 16)      -> ('data', 'model')        = 256 chips
+  multi-pod  : (2, 16, 16)   -> ('pod', 'data', 'model') = 512 chips
+
+'pod' composes with 'data' for the batch dimension (DP across pods — the
+gradient all-reduce crossing 'pod' is the DCN-equivalent hop in a real
+deployment) and with FSDP parameter sharding for the >=52B archs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape: Tuple[int, ...] = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under launch/dryrun.py (sets "
+            "--xla_force_host_platform_device_count=512)")
+    # more devices than the mesh needs (e.g. 512 forced, single-pod 256)
+    return Mesh(np.array(devices[:n]).reshape(shape), axes)
+
+
+def make_smoke_mesh(model_axis: int = 1) -> Mesh:
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    devices = jax.devices()
+    n = len(devices)
+    assert n % model_axis == 0
+    return Mesh(np.array(devices).reshape(n // model_axis, model_axis),
+                ("data", "model"))

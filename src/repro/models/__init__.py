@@ -1,0 +1,10 @@
+"""Model substrate: layer library + 10-architecture assembly."""
+
+from repro.models.model import (  # noqa: F401
+    Model,
+    batch_fields,
+    batch_spec,
+    build_model,
+    decode_inputs_spec,
+    make_batch,
+)

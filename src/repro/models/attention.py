@@ -1,0 +1,280 @@
+"""Attention: GQA/MQA projections, flash-equivalent chunked softmax
+(online-softmax ``lax.scan`` over KV blocks — the XLA-path twin of
+``repro.kernels.flash_attention``), sliding windows, logit softcaps, and
+ring-buffer KV caches for decode.
+
+Memory behavior is the point: naive attention materializes the (sq, skv)
+score matrix — 2 GiB/head at 32k — so every path here is O(sq * chunk).
+Softmax statistics are always fp32 (paper §V precision discipline).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, dense_init
+
+_NEG_INF = -1.0e30
+
+
+# --------------------------------------------------------------------- #
+# Projections
+# --------------------------------------------------------------------- #
+
+def init_attention(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads, cfg.head_dim), dtype,
+                         fan_in=d),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads, cfg.head_dim), dtype,
+                         fan_in=d),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads, cfg.head_dim), dtype,
+                         fan_in=d),
+        "wo": dense_init(ks[3], (cfg.n_heads, cfg.head_dim, d), dtype,
+                         fan_in=cfg.n_heads * cfg.head_dim),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, cfg.head_dim), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, cfg.head_dim), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, cfg.head_dim), dtype)
+    return p
+
+
+def project_q(p: dict, x: jax.Array) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    return q
+
+
+def project_kv(p: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+def project_out(p: dict, o: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# --------------------------------------------------------------------- #
+# Core softmax-attention maths (grouped-query layout)
+# --------------------------------------------------------------------- #
+
+def _group(q: jax.Array, n_kv: int) -> jax.Array:
+    """(b, s, hq, d) -> (b, s, n_kv, group, d)."""
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, d)
+
+
+def _scores(q: jax.Array, k: jax.Array, scale: float,
+            softcap: Optional[float]) -> jax.Array:
+    """q (b,sq,h,g,d) x k (b,sk,h,d) -> fp32 logits (b,h,g,sq,sk).
+
+    Operands stay at their native dtype (bf16 activations feed the MXU
+    directly); only the ACCUMULATION is forced fp32.  Explicitly casting
+    inputs to fp32 adds no information for bf16-valued activations but
+    doubles HBM operand traffic and halves MXU rate (§Perf iteration)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window: Optional[int]) -> jax.Array:
+    """Additive fp32 bias (sq, sk): 0 where visible, -inf-ish elsewhere."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    return jnp.where(ok, 0.0, _NEG_INF).astype(jnp.float32)
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, window: Optional[int] = None,
+                   softcap: Optional[float] = None,
+                   scale: Optional[float] = None,
+                   q_positions: Optional[jax.Array] = None,
+                   k_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Reference O(sq*sk)-memory attention (oracle + short-seq path).
+
+    q: (b, sq, hq, d); k, v: (b, sk, hkv, d).  Returns (b, sq, hq, d).
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = _group(q, hkv)
+    s = _scores(qg, k, scale, softcap)
+    q_pos = jnp.arange(sq) if q_positions is None else q_positions
+    k_pos = jnp.arange(sk) if k_positions is None else k_positions
+    s = s + _mask_bias(q_pos, k_pos, causal, window)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      scale: Optional[float] = None,
+                      chunk: int = 1024) -> jax.Array:
+    """Flash-equivalent attention: ``lax.scan`` over KV chunks with online
+    softmax.  O(sq * chunk) live memory instead of O(sq * sk).
+
+    Matches :func:`full_attention` to fp32-accumulation tolerance for any
+    chunk size (property-tested).  This is the production XLA path; the
+    Pallas twin (``repro.kernels.flash_attention``) additionally tiles sq
+    and pins operands in VMEM on real TPUs.
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    if sk % chunk != 0:
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sk_pad = sk + pad
+    else:
+        sk_pad = sk
+    n_chunks = sk_pad // chunk
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    g = hq // hkv
+    qg = _group(q, hkv)                               # (b,sq,h,g,d)
+    q_pos = jnp.arange(sq)
+
+    kc = k.reshape(b, n_chunks, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        ci, k_i, v_i = inputs
+        k_pos = ci * chunk + jnp.arange(chunk)
+        s = _scores(qg, k_i, scale, softcap)          # (b,h,g,sq,chunk)
+        valid = k_pos < sk                            # mask padding
+        bias = _mask_bias(q_pos, k_pos, causal, window)
+        bias = jnp.where(valid[None, :], bias, _NEG_INF)
+        s = s + bias
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = (acc * corr[..., None]
+                   + jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_i.dtype),
+                                v_i, preferred_element_type=jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o = (acc / l[..., None]).transpose(0, 3, 1, 2, 4)  # (b,sq,h,g,d)
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None,
+              scale=None, chunk: int = 1024):
+    """Dispatch: chunked when the KV axis is long enough to matter."""
+    if k.shape[1] <= chunk:
+        return full_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale, chunk=chunk)
+
+
+# --------------------------------------------------------------------- #
+# Decode (single new token against a — possibly ring — KV cache)
+# --------------------------------------------------------------------- #
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     slot_pos: jax.Array, pos: jax.Array, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     scale: Optional[float] = None) -> jax.Array:
+    """One-token attention against a cache.
+
+    q: (b, 1, hq, d); k_cache/v_cache: (b, S, hkv, d);
+    slot_pos: (b, S) int32 — absolute position held by each slot, -1 empty;
+    pos: (b,) per-row current position (continuous batching: rows advance
+    independently).  Ring buffers just wrap slot_pos.
+    """
+    b, _, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = _group(q, hkv)
+    s = _scores(qg, k_cache, scale, softcap)          # (b,h,g,1,S)
+    pos_b = pos[:, None]
+    ok = (slot_pos >= 0) & (slot_pos <= pos_b)
+    if window is not None:
+        ok &= slot_pos > pos_b - window
+    s = jnp.where(ok[:, None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# KV-cache plumbing (capacity = window for local layers — the ring buffer
+# is what makes gemma2 long_500k viable: 13 local layers hold 4k slots
+# instead of 500k)
+# --------------------------------------------------------------------- #
+
+def cache_capacity(max_seq: int, window: Optional[int]) -> int:
+    return min(max_seq, window) if window else max_seq
+
+
+def init_kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int,
+                  dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        "slot_pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+def cache_write_decode(cache: dict, k: jax.Array, v: jax.Array,
+                       pos: jax.Array) -> dict:
+    """Write one (b, 1, hkv, d) k/v at per-row slot ``pos % capacity``.
+
+    pos: (b,) — rows may sit at different positions (continuous batching),
+    so the write is a per-row scatter (one distinct slot per row)."""
+    b, cap = cache["k"].shape[0], cache["k"].shape[1]
+    slot = (pos % cap).astype(jnp.int32)
+    rows = jnp.arange(b)
+    k_new = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+    v_new = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+    sp = cache["slot_pos"].at[rows, slot].set(pos.astype(jnp.int32))
+    return {"k": k_new, "v": v_new, "slot_pos": sp}
+
+
+def cache_write_prefill(cache: dict, k: jax.Array, v: jax.Array) -> dict:
+    """Bulk-write a prefill's K/V (b, s, hkv, d) into the (ring) cache.
+
+    Keeps the last ``capacity`` positions; their slots ``p % capacity`` are
+    distinct, so the scatter is a permutation (well-defined).
+    """
+    cap = cache["k"].shape[1]
+    s = k.shape[1]
+    take = min(s, cap)
+    k_t = k[:, s - take:].astype(cache["k"].dtype)
+    v_t = v[:, s - take:].astype(cache["v"].dtype)
+    positions = jnp.arange(s - take, s, dtype=jnp.int32)
+    slots = positions % cap
+    k_new = cache["k"].at[:, slots].set(k_t)
+    v_new = cache["v"].at[:, slots].set(v_t)
+    sp = cache["slot_pos"].at[:, slots].set(
+        jnp.broadcast_to(positions, (k.shape[0], take)))
+    return {"k": k_new, "v": v_new, "slot_pos": sp}

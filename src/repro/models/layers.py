@@ -1,0 +1,156 @@
+"""Primitive layers shared by every architecture: norms, embeddings, RoPE,
+MLP variants, initializers.  Pure-functional: parameters are plain pytrees
+of ``jnp`` arrays; every ``apply`` is ``f(params, x, ...)``.
+
+Numerics discipline (informed by the paper's §V precision study): parameters
+are stored at ``param_dtype``, activations flow at ``compute_dtype``, and
+reductions that are precision-critical (norm statistics, softmax, final
+logits) are computed in float32 regardless.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------- #
+# Initialization
+# --------------------------------------------------------------------- #
+
+def normal_init(key: jax.Array, shape, stddev: float, dtype) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def dense_init(key: jax.Array, shape, dtype, fan_in: Optional[int] = None
+               ) -> jax.Array:
+    """Scaled (1/sqrt(fan_in)) truncated-normal; fan_in defaults to
+    ``shape[-2]`` (the contraction dim of a ``x @ w`` matmul)."""
+    if fan_in is None:
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    return normal_init(key, shape, 1.0 / math.sqrt(max(fan_in, 1)), dtype)
+
+
+# --------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------- #
+
+def rms_norm(w: jax.Array, x: jax.Array, eps: float = 1e-6,
+             gemma_style: bool = False) -> jax.Array:
+    """RMSNorm; statistics in fp32.  ``gemma_style`` uses (1 + w) scaling."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if gemma_style \
+        else w.astype(jnp.float32)
+    return (xf * scale).astype(dtype)
+
+
+def init_rms_norm(d: int, dtype, gemma_style: bool = False) -> jax.Array:
+    return jnp.zeros((d,), dtype) if gemma_style else jnp.ones((d,), dtype)
+
+
+# --------------------------------------------------------------------- #
+# Embedding / unembedding
+# --------------------------------------------------------------------- #
+
+def embed(w: jax.Array, tokens: jax.Array, scale_by_dim: bool = False
+          ) -> jax.Array:
+    """Token embedding lookup; gemma-family scales by sqrt(d_model)."""
+    x = jnp.take(w, tokens, axis=0)
+    if scale_by_dim:
+        x = x * jnp.asarray(math.sqrt(w.shape[-1]), x.dtype)
+    return x
+
+
+def unembed(w: jax.Array, x: jax.Array,
+            softcap: Optional[float] = None) -> jax.Array:
+    """Project to vocab logits (fp32) with optional final-logit softcap."""
+    logits = jnp.einsum("...d,dv->...v", x.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+# --------------------------------------------------------------------- #
+# Rotary position embedding
+# --------------------------------------------------------------------- #
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,), fp32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """Rotate ``x`` (..., seq, heads, head_dim) by ``positions`` (..., seq).
+
+    Split-half convention (llama/gemma): pairs are (x[:d/2], x[d/2:]).
+    Computed in fp32, returned at x.dtype.
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (...,s,d/2)
+    cos = jnp.cos(angles)[..., None, :]   # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# MLP variants
+# --------------------------------------------------------------------- #
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, variant: str, dtype
+             ) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], (d_model, d_ff), dtype),
+         "w2": dense_init(ks[1], (d_ff, d_model), dtype)}
+    if variant in ("swiglu", "geglu"):
+        p["w3"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, variant: str) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["w1"])
+    if variant == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("...d,df->...f", x, p["w3"])
+    elif variant == "geglu":
+        h = jax.nn.gelu(h, approximate=True) \
+            * jnp.einsum("...d,df->...f", x, p["w3"])
+    elif variant == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    else:
+        raise ValueError(f"unknown mlp variant {variant!r}")
+    return jnp.einsum("...f,fd->...d", h, p["w2"])
+
+
+# --------------------------------------------------------------------- #
+# Misc
+# --------------------------------------------------------------------- #
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (batch, seq, channels); kernel (C, K)."""
+    k = w.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x, w[:, None, :],                       # (C, 1, K)
+        window_strides=(1,),
+        padding=[(k - 1, 0)],
+        dimension_numbers=("NWC", "OIW", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b

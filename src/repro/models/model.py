@@ -1,0 +1,115 @@
+"""Unified model API over the 10 architecture families.
+
+``build_model(cfg)`` returns a :class:`Model` whose methods close over the
+config; batches are plain dicts.  ``make_batch`` produces real (smoke-test)
+arrays; ``batch_spec`` produces ``ShapeDtypeStruct`` stand-ins for the
+multi-pod dry-run (no allocation — the shannon/kernels pattern).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.transformer import (
+    VLM_PATCHES, init_cache, init_lm, lm_decode_step, lm_features,
+    lm_forward, lm_prefill, unembed_weight)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- parameters -------------------------------------------------- #
+    def init(self, key: jax.Array) -> dict:
+        return init_lm(key, self.cfg)
+
+    # -- execution modes --------------------------------------------- #
+    def forward(self, params: dict, batch: Dict[str, jax.Array]):
+        return lm_forward(params, batch, self.cfg)
+
+    def features(self, params: dict, batch: Dict[str, jax.Array]):
+        return lm_features(params, batch, self.cfg)
+
+    def unembed_weight(self, params: dict):
+        return unembed_weight(params, self.cfg)
+
+    def prefill(self, params: dict, batch: Dict[str, jax.Array],
+                max_seq: int):
+        return lm_prefill(params, batch, self.cfg, max_seq)
+
+    def decode_step(self, params: dict, cache: dict, token: jax.Array,
+                    pos: jax.Array):
+        return lm_decode_step(params, cache, token, pos, self.cfg)
+
+    def init_cache(self, batch: int, max_seq: int, enc_len: int = 0):
+        return init_cache(self.cfg, batch, max_seq, enc_len)
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+# --------------------------------------------------------------------- #
+# Batch construction (real arrays / dry-run specs)
+# --------------------------------------------------------------------- #
+
+def vlm_patches(seq_len: int) -> int:
+    """Patch-prefix length for VLM trunks (shrinks for tiny smoke seqs)."""
+    return min(VLM_PATCHES, max(1, seq_len // 2))
+
+
+def _text_len(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.frontend == "vision":
+        return seq_len - vlm_patches(seq_len)
+    return seq_len
+
+
+def batch_fields(cfg: ArchConfig, shape: ShapeConfig
+                 ) -> Dict[str, Tuple[tuple, str]]:
+    """{name: (shape, dtype)} for a *forward/prefill* batch."""
+    b, s = shape.global_batch, shape.seq_len
+    emb_dtype = cfg.compute_dtype
+    fields: Dict[str, Tuple[tuple, str]] = {}
+    if cfg.is_encoder_decoder:
+        # audio frontend stub: precomputed frame embeddings
+        fields["frames"] = ((b, s, cfg.d_model), emb_dtype)
+        fields["tokens"] = ((b, s), "int32")
+    elif cfg.frontend == "vision":
+        fields["patches"] = ((b, vlm_patches(s), cfg.d_model), emb_dtype)
+        fields["tokens"] = ((b, _text_len(cfg, s)), "int32")
+    else:
+        fields["tokens"] = ((b, s), "int32")
+    return fields
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, key: jax.Array
+               ) -> Dict[str, jax.Array]:
+    out = {}
+    for name, (shp, dtype) in batch_fields(cfg, shape).items():
+        key, sub = jax.random.split(key)
+        if dtype == "int32":
+            out[name] = jax.random.randint(sub, shp, 0, cfg.vocab_size,
+                                           jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, shp, jnp.dtype(dtype)) * 0.02
+    return out
+
+
+def batch_spec(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {name: jax.ShapeDtypeStruct(shp, jnp.dtype(dtype))
+            for name, (shp, dtype) in batch_fields(cfg, shape).items()}
+
+
+def decode_inputs_spec(cfg: ArchConfig, shape: ShapeConfig):
+    """(cache, token, pos) ShapeDtypeStructs for a decode-shape cell."""
+    b, s = shape.global_batch, shape.seq_len
+    enc_len = s if cfg.is_encoder_decoder else 0
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, s, enc_len=enc_len))
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return cache, token, pos

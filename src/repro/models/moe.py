@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN — GShard/Switch-style capacity dispatch, TPU-native.
+
+Design notes (these ARE the perf decisions; see DESIGN.md §6 and the
+roofline hillclimb in EXPERIMENTS.md §Perf):
+
+* Tokens are routed within fixed-size *subgroups* (default 512) so the
+  dispatch/combine einsums stay matmul-shaped for the MXU and the one-hot
+  tensors stay O(t_g^2 * k) per group — independent of the expert count.
+  Dispatch-FLOPs overhead vs expert compute = 2*t_g*cf / (6*d_ff) ~ 10%
+  at t_g=512, d_ff=2048.
+* Expert weights (E, d, f) carry E on the 'model' mesh axis (EP) and are
+  additionally FSDP-sharded for the >=400B archs; XLA's SPMD partitioner
+  inserts the token all-to-all implied by the dispatch einsum.
+* Capacity factor 1.25 with top-k renormalized gates; dropped tokens fall
+  through the residual (standard Switch behavior).
+* Aux losses: load-balance (Switch eq. 4) + router z-loss.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, init_mlp, apply_mlp
+
+MOE_SUBGROUP = 512
+
+
+def init_moe(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.moe_num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32, fan_in=d),
+        "w1": dense_init(ks[1], (e, d, f), dtype, fan_in=d),
+        "w2": dense_init(ks[2], (e, f, d), dtype, fan_in=f),
+    }
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        p["w3"] = dense_init(ks[3], (e, d, f), dtype, fan_in=d)
+    if cfg.moe_shared_expert:
+        p["shared"] = init_mlp(ks[4], d, f, cfg.mlp_variant, dtype)
+    return p
+
+
+def _capacity(t_g: int, e: int, k: int, cf: float) -> int:
+    return max(1, int(math.ceil(t_g * k * cf / e)))
+
+
+def _expert_ffn(p: dict, x: jax.Array, variant: str) -> jax.Array:
+    """x (g, e, c, d) through per-expert MLP weights (e, d, f)."""
+    h = jnp.einsum("gecd,edf->gecf", x, p["w1"])
+    if variant == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", x, p["w3"])
+    elif variant == "geglu":
+        h = jax.nn.gelu(h, approximate=True) \
+            * jnp.einsum("gecd,edf->gecf", x, p["w3"])
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("gecf,efd->gecd", h, p["w2"])
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ArchConfig,
+              subgroup: int = MOE_SUBGROUP
+              ) -> Tuple[jax.Array, dict]:
+    """MoE FFN.  x: (b, s, d) -> (y, aux) with aux = {lb_loss, z_loss,
+    dropped_frac-ish stats}."""
+    b, s, d = x.shape
+    e, k, cf = cfg.moe_num_experts, cfg.moe_top_k, cfg.moe_capacity_factor
+    t_g = min(subgroup, s)
+    assert s % t_g == 0, f"seq {s} not divisible by subgroup {t_g}"
+    g = b * (s // t_g)
+    xg = x.reshape(g, t_g, d)
+
+    # --- routing (fp32) ---
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)               # (g, t, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # --- position-in-expert via cumsum over the (t*k) flat priority ---
+    c = _capacity(t_g, e, k, cf)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (g, t, k, e)
+    flat = onehot.reshape(g, t_g * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                # (g, t*k, e)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(g, t_g, k)
+    keep = (pos < c)
+    gate = gate * keep.astype(gate.dtype)
+
+    # --- dispatch / combine one-hots (bf16 matmul operands) ---
+    oh_e = onehot.astype(x.dtype)                     # (g,t,k,e)
+    oh_c = jax.nn.one_hot(jnp.where(keep, pos, c), c, dtype=x.dtype)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", oh_e, oh_c)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", oh_e, oh_c,
+                         gate.astype(x.dtype))
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)
+    expert_out = _expert_ffn(p, expert_in, cfg.mlp_variant)
+    y = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], xg, cfg.mlp_variant)
+
+    # --- aux losses (Switch eq.4 load balance + z-loss) ---
+    density = jnp.mean(onehot.astype(jnp.float32)[:, :, 0, :], axis=1)
+    prob_mean = jnp.mean(probs, axis=1)               # (g, e)
+    lb_loss = e * jnp.mean(jnp.sum(density * prob_mean, axis=-1))
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_dropped": dropped}
+    return y.reshape(b, s, d), aux

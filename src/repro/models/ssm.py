@@ -1,0 +1,254 @@
+"""Mamba-2 SSD (state-space duality) block — mamba2-2.7b and the jamba
+hybrid's mixer.
+
+Chunked-parallel form (Dao & Gu, arXiv:2405.21060): the sequence is split
+into chunks of length Q; within a chunk the SSM is computed as a masked
+quadratic attention-like product (MXU-friendly), and chunk-final states are
+propagated with a short sequential scan — O(s*Q) work for the diagonal
+blocks plus O(s/Q) scan steps, instead of an O(s) elementwise recurrence.
+
+The pure-jnp implementation here is the production XLA path *and* the
+oracle for ``repro.kernels.ssd_scan`` (the Pallas twin).  Decode is the
+O(1)-state recurrence — the reason mamba2/jamba run the ``long_500k`` cell
+that full-attention archs must skip.
+
+TP layout (DESIGN.md §6): projections are kept *separate* (wz/wx/wb/wc/wdt
+and three depthwise convs — per-channel independent, so splitting the
+fused conv is exactly equivalent) so the d_inner/head dims shard cleanly on
+the 'model' axis while the head-shared B/C/state dim n stays replicated;
+the SSD core then runs with zero collectives under TP.
+
+Layout: x (b, s, h, p) heads x head_dim; B, C (b, s, n) with a single
+group shared across heads (ngroups=1); A scalar per head.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import causal_conv1d, dense_init, rms_norm
+
+
+# --------------------------------------------------------------------- #
+# Parameters
+# --------------------------------------------------------------------- #
+
+def init_ssm(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
+    d, d_in, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k_conv = cfg.ssm_conv
+    ks = jax.random.split(key, 10)
+    # dt_bias ~ softplus^-1(dt), dt log-uniform in [1e-3, 1e-1]
+    dt = jnp.exp(jnp.linspace(math.log(1e-3), math.log(1e-1), h))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "wz": dense_init(ks[0], (d, d_in), dtype, fan_in=d),
+        "wx": dense_init(ks[1], (d, d_in), dtype, fan_in=d),
+        "wb": dense_init(ks[2], (d, n), dtype, fan_in=d),
+        "wc": dense_init(ks[3], (d, n), dtype, fan_in=d),
+        "wdt": dense_init(ks[4], (d, h), dtype, fan_in=d),
+        "conv_x_w": dense_init(ks[5], (d_in, k_conv), dtype, fan_in=k_conv),
+        "conv_x_b": jnp.zeros((d_in,), dtype),
+        "conv_b_w": dense_init(ks[6], (n, k_conv), dtype, fan_in=k_conv),
+        "conv_b_b": jnp.zeros((n,), dtype),
+        "conv_c_w": dense_init(ks[7], (n, k_conv), dtype, fan_in=k_conv),
+        "conv_c_b": jnp.zeros((n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[8], (d_in, d), dtype, fan_in=d_in),
+    }
+
+
+# --------------------------------------------------------------------- #
+# Chunked SSD core (training / prefill)
+# --------------------------------------------------------------------- #
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., q) -> lower-triangular cumulative segment sums (..., q, q):
+    out[i, j] = sum(a[j+1..i]) for i >= j, -inf above the diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt_a: jax.Array, b: jax.Array, c: jax.Array,
+                chunk: int,
+                initial_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunk-parallel SSD.
+
+    x:    (bt, s, h, p)  — already discretized (multiplied by dt)
+    dt_a: (bt, s, h)     — per-step log decay (dt * A, negative)
+    b, c: (bt, s, n)     — input/output projections (shared across heads)
+    Returns (y (bt, s, h, p), final_state (bt, h, p, n)).  All maths fp32.
+    """
+    bt, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc = s // chunk
+    x = x.astype(jnp.float32).reshape(bt, nc, chunk, h, p)
+    a = dt_a.astype(jnp.float32).reshape(bt, nc, chunk, h)
+    a = a.transpose(0, 3, 1, 2)                       # (bt,h,nc,q)
+    bm = b.astype(jnp.float32).reshape(bt, nc, chunk, n)
+    cm = c.astype(jnp.float32).reshape(bt, nc, chunk, n)
+
+    a_cs = jnp.cumsum(a, axis=-1)                     # (bt,h,nc,q)
+    # 1. intra-chunk (diagonal blocks): masked quadratic form
+    el = jnp.exp(_segsum(a))                          # (bt,h,nc,q,q)
+    scores = jnp.einsum("bcln,bcsn->bcls", cm, bm)    # (bt,nc,q,q)
+    y_diag = jnp.einsum("bcls,bhcls,bcshp->bclhp", scores, el, x)
+    # 2. chunk-final states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)     # (bt,h,nc,q)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bm, decay_states, x)
+    # 3. inter-chunk recurrence (sequential scan over nc chunks)
+    chunk_decay = jnp.exp(a_cs[..., -1])              # (bt,h,nc)
+    h0 = (jnp.zeros((bt, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(h_prev, inp):
+        s_c, d_c = inp                                # (bt,h,p,n),(bt,h)
+        h_new = h_prev * d_c[..., None, None] + s_c
+        return h_new, h_prev                          # emit entering state
+
+    (final_state, prev_states) = jax.lax.scan(
+        step, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (bt,nc,h,p,n)
+    # 4. contribution of the entering state within each chunk
+    state_decay = jnp.exp(a_cs)                       # (bt,h,nc,q)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cm, prev_states,
+                       state_decay)
+    y = (y_diag + y_off).reshape(bt, s, h, p)
+    return y, final_state
+
+
+def ssd_reference(x, dt_a, b, c, initial_state=None):
+    """O(s) sequential recurrence — the oracle for ``ssd_chunked``."""
+    bt, s, h, p = x.shape
+    n = b.shape[-1]
+    h0 = (jnp.zeros((bt, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, a_t, b_t, c_t = inp                      # (bt,h,p),(bt,h),(bt,n)
+        state = (state * jnp.exp(a_t)[..., None, None]
+                 + x_t[..., None] * b_t[:, None, None, :])
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y_t
+
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt_a.astype(jnp.float32).transpose(1, 0, 2),
+          b.astype(jnp.float32).transpose(1, 0, 2),
+          c.astype(jnp.float32).transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), final
+
+
+# --------------------------------------------------------------------- #
+# Full block: proj -> conv -> SSD -> gated norm -> proj
+# --------------------------------------------------------------------- #
+
+def _discretize(p: dict, dt_raw: jax.Array):
+    """dt = softplus(raw + bias); returns (dt, dt*A) in fp32."""
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])                          # (h,) negative
+    return dt, dt * a
+
+
+def _project(p: dict, x: jax.Array):
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xr = jnp.einsum("bsd,de->bse", x, p["wx"])
+    br = jnp.einsum("bsd,dn->bsn", x, p["wb"])
+    cr = jnp.einsum("bsd,dn->bsn", x, p["wc"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+    return z, xr, br, cr, dt_raw
+
+
+def ssm_forward(p: dict, x: jax.Array, cfg: ArchConfig,
+                return_state: bool = False):
+    """Full-sequence SSD block.  x: (bt, s, d_model) -> same shape."""
+    bt, s, _ = x.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xr, br, cr, dt_raw = _project(p, x)
+    xh = jax.nn.silu(causal_conv1d(xr, p["conv_x_w"], p["conv_x_b"]))
+    b_ = jax.nn.silu(causal_conv1d(br, p["conv_b_w"], p["conv_b_b"]))
+    c_ = jax.nn.silu(causal_conv1d(cr, p["conv_c_w"], p["conv_c_b"]))
+    xh = xh.reshape(bt, s, h, pd)
+    dt, dt_a = _discretize(p, dt_raw)
+    chunk = min(cfg.ssm_chunk, s)
+    x_disc, b_c, c_c = xh * dt[..., None], b_, c_
+    pad = (-s) % chunk
+    if pad:
+        # identity-pad the tail: dt_a=0 => decay 1, x=0 => no input, so
+        # outputs for real positions and the final state are exact.
+        x_disc = jnp.pad(x_disc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_a = jnp.pad(dt_a, ((0, 0), (0, pad), (0, 0)))
+        b_c = jnp.pad(b_c, ((0, 0), (0, pad), (0, 0)))
+        c_c = jnp.pad(c_c, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_chunked(x_disc, dt_a, b_c, c_c, chunk)
+    y = y[:, :s]
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)  # per-head skip
+    y = y.reshape(bt, s, h * pd).astype(x.dtype)
+    y = rms_norm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_state:
+        k1 = cfg.ssm_conv - 1
+        def tail(r):
+            if s >= k1:
+                return r[:, s - k1:, :]
+            return jnp.pad(r, ((0, 0), (k1 - s, 0), (0, 0)))
+        conv_state = jnp.concatenate(
+            [tail(xr), tail(br), tail(cr)], axis=-1).astype(x.dtype)
+        return out, (conv_state, state)
+    return out
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+    }
+
+
+def ssm_decode(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig
+               ) -> Tuple[jax.Array, dict]:
+    """One-token recurrence.  x: (bt, 1, d_model)."""
+    bt = x.shape[0]
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_in = cfg.d_inner
+    z, xr, br, cr, dt_raw = _project(p, x)
+    # conv over (k-1) cached raw inputs + this one (channels: [x | B | C])
+    raw = jnp.concatenate([xr, br, cr], axis=-1)      # (bt,1,conv_dim)
+    window = jnp.concatenate([cache["conv"], raw], axis=1)  # (bt,k,C)
+    wx, wb_, wc_ = window[..., :d_in], window[..., d_in:d_in + n], \
+        window[..., d_in + n:]
+    xh = jax.nn.silu(jnp.einsum("bkc,ck->bc", wx, p["conv_x_w"])
+                     + p["conv_x_b"])[:, None, :]
+    b_ = jax.nn.silu(jnp.einsum("bkc,ck->bc", wb_, p["conv_b_w"])
+                     + p["conv_b_b"])[:, None, :]
+    c_ = jax.nn.silu(jnp.einsum("bkc,ck->bc", wc_, p["conv_c_w"])
+                     + p["conv_c_b"])[:, None, :]
+    xh = xh.reshape(bt, 1, h, pd)
+    dt, dt_a = _discretize(p, dt_raw)
+    # state update: S <- S * exp(dt*A) + (dt*x) outer B
+    xd = (xh * dt[..., None]).astype(jnp.float32)[:, 0]        # (bt,h,p)
+    decay = jnp.exp(dt_a.astype(jnp.float32))[:, 0]            # (bt,h)
+    state = (cache["state"] * decay[..., None, None]
+             + xd[..., None] * b_.astype(jnp.float32)[:, 0, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", state, c_.astype(jnp.float32)[:, 0])
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)[:, 0]
+    y = y.reshape(bt, 1, h * pd).astype(x.dtype)
+    y = rms_norm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_cache = {"conv": window[:, 1:, :], "state": state}
+    return out, new_cache

@@ -1,0 +1,442 @@
+"""Model assembly: heterogeneous blocks arranged in repeating periods,
+scanned with ``lax.scan`` so HLO size is O(period) not O(n_layers).
+
+Three execution modes share one parameter tree:
+  * ``lm_forward``     — teacher-forced full sequence (training / scoring)
+  * ``lm_prefill``     — forward + KV/SSM cache construction (serving)
+  * ``lm_decode_step`` — one token against the cache (serving)
+
+Supports: decoder-only LMs (dense/GQA/MQA, local+global windows, logit
+softcaps, MoE FFNs, SSD mixers, hybrid interleaves), encoder-decoder
+(seamless: audio-frontend stub -> encoder; decoder w/ cross-attention),
+and VLM early fusion (patch-embedding stub prepended to the trunk).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockSpec
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    apply_mlp, dense_init, embed, init_mlp, init_rms_norm, rms_norm, unembed)
+
+# Number of vision patches the VLM frontend stub contributes to the trunk.
+VLM_PATCHES = 256
+
+AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_dropped")
+
+
+def _shard_batch(x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Pin the batch dim to the DP mesh axes (activation sharding
+    constraint at block boundaries — megatron-style batch-sharded,
+    d-replicated activations).  No-op when cfg.batch_axes is unset."""
+    if not cfg.batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    axes = cfg.batch_axes[0] if len(cfg.batch_axes) == 1 \
+        else tuple(cfg.batch_axes)
+    return jax.lax.with_sharding_constraint(
+        x, P(axes, *(None for _ in x.shape[1:])))
+
+
+def _zero_aux() -> Dict[str, jax.Array]:
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def _acc_aux(acc, new):
+    out = dict(acc)
+    for k, v in new.items():
+        out[k] = out[k] + v
+    return out
+
+
+# --------------------------------------------------------------------- #
+# Block init / apply
+# --------------------------------------------------------------------- #
+
+def init_block(key: jax.Array, cfg: ArchConfig, blk: BlockSpec, dtype
+               ) -> dict:
+    ks = iter(jax.random.split(key, 8))
+    p: dict = {}
+    if blk.mixer == "attn":
+        p["ln_mix"] = init_rms_norm(cfg.d_model, dtype)
+        p["attn"] = attn.init_attention(next(ks), cfg, dtype)
+        if blk.cross_attn:
+            p["ln_cross"] = init_rms_norm(cfg.d_model, dtype)
+            p["cross"] = attn.init_attention(next(ks), cfg, dtype)
+    elif blk.mixer == "ssm":
+        p["ln_mix"] = init_rms_norm(cfg.d_model, dtype)
+        p["ssm"] = ssm_lib.init_ssm(next(ks), cfg, dtype)
+    if blk.ffn == "dense":
+        p["ln_ffn"] = init_rms_norm(cfg.d_model, dtype)
+        p["mlp"] = init_mlp(next(ks), cfg.d_model, cfg.d_ff,
+                            cfg.mlp_variant, dtype)
+    elif blk.ffn == "moe":
+        p["ln_ffn"] = init_rms_norm(cfg.d_model, dtype)
+        p["moe"] = moe_lib.init_moe(next(ks), cfg, dtype)
+    return p
+
+
+def _self_attention_train(p, x, cfg: ArchConfig, blk: BlockSpec,
+                          causal: bool = True,
+                          return_kv: bool = False):
+    positions = jnp.arange(x.shape[1])
+    q = attn.project_q(p, x)
+    k, v = attn.project_kv(p, x)
+    from repro.models.layers import apply_rope
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    ka, va = k, v
+    if cfg.attn_repeat_kv and cfg.n_kv_heads < cfg.n_heads:
+        g = cfg.n_heads // cfg.n_kv_heads
+        ka, va = jnp.repeat(k, g, axis=2), jnp.repeat(v, g, axis=2)
+    if cfg.attn_seq_shard and cfg.batch_axes:
+        # context parallelism: queries sharded over 'model' (KV stays
+        # full — each shard attends its query slice to all keys); the
+        # causal mask is position-computed so SPMD partitions it exactly
+        from jax.sharding import PartitionSpec as P
+        b_ax = cfg.batch_axes[0] if len(cfg.batch_axes) == 1 \
+            else tuple(cfg.batch_axes)
+        q = jax.lax.with_sharding_constraint(
+            q, P(b_ax, "model", None, None))
+    o = attn.attention(q, ka, va, causal=causal, window=blk.window,
+                       softcap=cfg.attn_logit_softcap,
+                       chunk=cfg.attn_chunk)
+    if cfg.attn_seq_shard and cfg.batch_axes:
+        from jax.sharding import PartitionSpec as P
+        b_ax = cfg.batch_axes[0] if len(cfg.batch_axes) == 1 \
+            else tuple(cfg.batch_axes)
+        o = jax.lax.with_sharding_constraint(
+            o, P(b_ax, "model", None, None))
+    out = attn.project_out(p, o)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def apply_block(p: dict, blk: BlockSpec, cfg: ArchConfig, x: jax.Array,
+                enc_out: Optional[jax.Array] = None,
+                causal: bool = True) -> Tuple[jax.Array, dict]:
+    """Full-sequence block (training / scoring).  Returns (x, aux)."""
+    aux: Dict[str, jax.Array] = {}
+    x = _shard_batch(x, cfg)
+    if blk.mixer == "attn":
+        h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
+        x = x + _self_attention_train(p["attn"], h, cfg, blk, causal=causal)
+        if blk.cross_attn and enc_out is not None:
+            h = rms_norm(p["ln_cross"], x, cfg.norm_eps)
+            q = attn.project_q(p["cross"], h)
+            k, v = attn.project_kv(p["cross"], enc_out)
+            o = attn.attention(q, k, v, causal=False)
+            x = x + attn.project_out(p["cross"], o)
+    elif blk.mixer == "ssm":
+        h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
+        x = x + ssm_lib.ssm_forward(p["ssm"], h, cfg)
+    if blk.ffn == "dense":
+        h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], h, cfg.mlp_variant)
+    elif blk.ffn == "moe":
+        h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+        y, aux = moe_lib.apply_moe(p["moe"], h, cfg)
+        x = x + y
+    return x, aux
+
+
+# --------------------------------------------------------------------- #
+# Parameter tree
+# --------------------------------------------------------------------- #
+
+def init_lm(key: jax.Array, cfg: ArchConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    pattern = cfg.block_pattern()
+    n_p = cfg.n_periods
+    k_embed, k_unembed, k_layers, k_enc = jax.random.split(key, 4)
+
+    params: dict = {
+        "embed": dense_init(k_embed, (cfg.vocab_size, cfg.d_model), dtype,
+                            fan_in=cfg.d_model),
+        "final_norm": init_rms_norm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(
+            k_unembed, (cfg.d_model, cfg.vocab_size), dtype,
+            fan_in=cfg.d_model)
+
+    layer_keys = jax.random.split(k_layers, len(pattern))
+    stacked = {}
+    for i, blk in enumerate(pattern):
+        per_keys = jax.random.split(layer_keys[i], n_p)
+        stacked[f"pos{i}"] = jax.vmap(
+            lambda k, blk=blk: init_block(k, cfg, blk, dtype))(per_keys)
+    params["layers"] = stacked
+
+    if cfg.is_encoder_decoder:
+        enc_blk = BlockSpec(mixer="attn", ffn="dense")
+        enc_keys = jax.random.split(k_enc, cfg.n_encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(
+                lambda k: init_block(k, cfg, enc_blk, dtype))(enc_keys),
+            "final_norm": init_rms_norm(cfg.d_model, dtype),
+        }
+    return params
+
+
+def _remat_wrap(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+# --------------------------------------------------------------------- #
+# Encoder (enc-dec archs)
+# --------------------------------------------------------------------- #
+
+def encode(params: dict, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Bidirectional encoder over frontend embeddings (b, s_src, d)."""
+    enc_blk = BlockSpec(mixer="attn", ffn="dense")
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+
+    def layer_fn(x, layer_params):
+        x, _ = apply_block(layer_params, enc_blk, cfg, x, causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(_remat_wrap(layer_fn, cfg), x,
+                        params["encoder"]["layers"])
+    return rms_norm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+# --------------------------------------------------------------------- #
+# Full-sequence forward (training / scoring)
+# --------------------------------------------------------------------- #
+
+def trunk_inputs(params: dict, cfg: ArchConfig, batch: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Token embeddings (+ modality fusion) and optional encoder output."""
+    x = embed(params["embed"], batch["tokens"])
+    enc_out = None
+    if cfg.frontend == "vision" and "patches" in batch:
+        x = jnp.concatenate(
+            [batch["patches"].astype(x.dtype), x], axis=1)
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, batch["frames"], cfg)
+    return _shard_batch(x.astype(jnp.dtype(cfg.compute_dtype)), cfg), enc_out
+
+
+def lm_features(params: dict, batch: Dict[str, jax.Array], cfg: ArchConfig
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Trunk output after the final norm, BEFORE unembedding:
+    (features (b, s_trunk, d) at compute dtype, aux losses).
+
+    The training loss consumes features + :func:`unembed_weight` and
+    projects to vocab in sequence chunks — materializing the full fp32
+    (b, s, vocab) logits costs ~5 GiB/device at 150k vocabs (measured in
+    the dry-run before this refactor; see EXPERIMENTS.md §Perf)."""
+    pattern = cfg.block_pattern()
+    x, enc_out = trunk_inputs(params, cfg, batch)
+
+    def period_fn(carry, period_params):
+        x, aux = carry
+        for i, blk in enumerate(pattern):
+            x, a = apply_block(period_params[f"pos{i}"], blk, cfg, x,
+                               enc_out=enc_out)
+            aux = _acc_aux(aux, a)
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(_remat_wrap(period_fn, cfg),
+                               (x, _zero_aux()), params["layers"])
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def unembed_weight(params: dict, cfg: ArchConfig) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def lm_forward(params: dict, batch: Dict[str, jax.Array], cfg: ArchConfig
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (logits (b, s_trunk, vocab) fp32, aux losses)."""
+    x, aux = lm_features(params, batch, cfg)
+    logits = unembed(unembed_weight(params, cfg), x,
+                     softcap=cfg.final_logit_softcap)
+    return logits, aux
+
+
+# --------------------------------------------------------------------- #
+# Serving: cache init / prefill / decode
+# --------------------------------------------------------------------- #
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               enc_len: int = 0) -> dict:
+    """Cache pytree; attention capacities honor sliding windows (ring).
+
+    ``cfg.cache_dtype`` (e.g. float8_e4m3fn) stores attention KV at
+    reduced precision — decode is weight/KV-read bound, so this is the
+    §VII.B serving-precision lever applied to the cache.  SSM conv/state
+    stay at compute/fp32 precision (tiny, and the recurrence compounds
+    rounding)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    kv_dtype = jnp.dtype(cfg.cache_dtype or cfg.compute_dtype)
+    pattern = cfg.block_pattern()
+    n_p = cfg.n_periods
+    cache: dict = {}
+    for i, blk in enumerate(pattern):
+        entry: dict = {}
+        if blk.mixer == "attn":
+            cap = attn.cache_capacity(max_seq, blk.window)
+            kv = attn.init_kv_cache(batch, cap, cfg.n_kv_heads,
+                                    cfg.head_dim, kv_dtype)
+            entry["kv"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_p,) + a.shape), kv)
+            if blk.cross_attn:
+                z = jnp.zeros((n_p, batch, enc_len, cfg.n_kv_heads,
+                               cfg.head_dim), dtype)
+                entry["cross_kv"] = {"k": z, "v": z}
+        elif blk.mixer == "ssm":
+            sc = ssm_lib.init_ssm_cache(cfg, batch, dtype)
+            entry["ssm"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_p,) + a.shape), sc)
+        cache[f"pos{i}"] = entry
+    if cfg.is_encoder_decoder:
+        cache["enc_out"] = jnp.zeros((batch, enc_len, cfg.d_model), dtype)
+    return cache
+
+
+def lm_prefill(params: dict, batch: Dict[str, jax.Array], cfg: ArchConfig,
+               max_seq: int) -> Tuple[jax.Array, dict]:
+    """Forward over the prompt, building the cache.  Returns
+    (last-position logits (b, vocab), cache)."""
+    pattern = cfg.block_pattern()
+    x, enc_out = trunk_inputs(params, cfg, batch)
+    s = x.shape[1]
+    cache = init_cache(cfg, x.shape[0], max_seq,
+                       enc_len=enc_out.shape[1] if enc_out is not None else 0)
+
+    def period_fn(carry, period_params):
+        x, aux = carry
+        new_entries = {}
+        for i, blk in enumerate(pattern):
+            x = _shard_batch(x, cfg)
+            p = period_params[f"pos{i}"]
+            entry = {}
+            if blk.mixer == "attn":
+                h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
+                out, (k, v) = _self_attention_train(
+                    p["attn"], h, cfg, blk, return_kv=True)
+                x = x + out
+                cap = attn.cache_capacity(max_seq, blk.window)
+                kv0 = attn.init_kv_cache(x.shape[0], cap, cfg.n_kv_heads,
+                                         cfg.head_dim, k.dtype)
+                entry["kv"] = attn.cache_write_prefill(kv0, k, v)
+                if blk.cross_attn and enc_out is not None:
+                    h = rms_norm(p["ln_cross"], x, cfg.norm_eps)
+                    q = attn.project_q(p["cross"], h)
+                    ck, cv = attn.project_kv(p["cross"], enc_out)
+                    o = attn.attention(q, ck, cv, causal=False)
+                    x = x + attn.project_out(p["cross"], o)
+                    entry["cross_kv"] = {"k": ck, "v": cv}
+            elif blk.mixer == "ssm":
+                h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
+                out, (conv_state, ssm_state) = ssm_lib.ssm_forward(
+                    p["ssm"], h, cfg, return_state=True)
+                x = x + out
+                entry["ssm"] = {"conv": conv_state, "state": ssm_state}
+            if blk.ffn == "dense":
+                h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+                x = x + apply_mlp(p["mlp"], h, cfg.mlp_variant)
+            elif blk.ffn == "moe":
+                h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+                y, a = moe_lib.apply_moe(p["moe"], h, cfg)
+                x = x + y
+                aux = _acc_aux(aux, a)
+            new_entries[f"pos{i}"] = entry
+        return (x, aux), new_entries
+
+    (x, _), per_period = jax.lax.scan(period_fn, (x, _zero_aux()),
+                                      params["layers"])
+    for key in per_period:
+        cache[key] = per_period[key]
+    if enc_out is not None:
+        cache["enc_out"] = enc_out
+    x_last = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    w_out = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(w_out, x_last, softcap=cfg.final_logit_softcap)[:, 0]
+    return logits, cache
+
+
+def lm_decode_step(params: dict, cache: dict, token: jax.Array,
+                   pos: jax.Array, cfg: ArchConfig
+                   ) -> Tuple[jax.Array, dict]:
+    """One decode step.  token: (b,) int32; pos: (b,) int32 per-row
+    position of the *incoming* token (rows advance independently under
+    continuous batching; pass a broadcast scalar for lockstep decode).
+    Returns (logits (b, vocab), updated cache)."""
+    from repro.models.layers import apply_rope
+    pattern = cfg.block_pattern()
+    x = embed(params["embed"], token[:, None])        # (b, 1, d)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    enc_out = cache.get("enc_out")
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, token.shape)
+    positions = pos[:, None]                          # (b, 1)
+
+    def period_fn(x, scanned):
+        period_params, period_cache = scanned
+        new_cache = {}
+        for i, blk in enumerate(pattern):
+            p = period_params[f"pos{i}"]
+            c = period_cache[f"pos{i}"]
+            entry = {}
+            if blk.mixer == "attn":
+                h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
+                q = attn.project_q(p["attn"], h)
+                k, v = attn.project_kv(p["attn"], h)
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_theta)
+                kv = attn.cache_write_decode(c["kv"], k, v, pos)
+                o = attn.decode_attention(
+                    q, kv["k"], kv["v"], kv["slot_pos"], pos,
+                    window=blk.window, softcap=cfg.attn_logit_softcap)
+                x = x + attn.project_out(p["attn"], o)
+                entry["kv"] = kv
+                if blk.cross_attn and enc_out is not None:
+                    h = rms_norm(p["ln_cross"], x, cfg.norm_eps)
+                    q = attn.project_q(p["cross"], h)
+                    ck, cv = c["cross_kv"]["k"], c["cross_kv"]["v"]
+                    o = attn.attention(q, ck, cv, causal=False)
+                    x = x + attn.project_out(p["cross"], o)
+                    entry["cross_kv"] = c["cross_kv"]
+            elif blk.mixer == "ssm":
+                h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
+                out, entry["ssm"] = ssm_lib.ssm_decode(p["ssm"], h,
+                                                       c["ssm"], cfg)
+                x = x + out
+            if blk.ffn == "dense":
+                h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+                x = x + apply_mlp(p["mlp"], h, cfg.mlp_variant)
+            elif blk.ffn == "moe":
+                h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+                y, _ = moe_lib.apply_moe(p["moe"], h, cfg)
+                x = x + y
+            new_cache[f"pos{i}"] = entry
+        return x, new_cache
+
+    layer_cache = {k: v for k, v in cache.items() if k.startswith("pos")}
+    x, new_layer_cache = jax.lax.scan(
+        period_fn, x, (params["layers"], layer_cache))
+    out_cache = dict(new_layer_cache)
+    if enc_out is not None:
+        out_cache["enc_out"] = enc_out
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    w_out = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(w_out, x, softcap=cfg.final_logit_softcap)[:, 0]
+    return logits, out_cache

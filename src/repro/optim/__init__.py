@@ -1,0 +1,10 @@
+"""Optimizers (no external deps): AdamW with precision/memory knobs."""
+
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    Schedule,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    opt_state_specs,
+)

@@ -1,0 +1,10 @@
+"""Serving stack: samplers, quantization, batched engine."""
+
+from repro.serve.sampler import sample_token  # noqa: F401
+from repro.serve.quant import (  # noqa: F401
+    LOW_PRECISION_FORMATS,
+    dequantize_blockwise,
+    quantize_blockwise,
+    quantize_params,
+)
+from repro.serve.engine import ServeEngine, GenerationResult  # noqa: F401

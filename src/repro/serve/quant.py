@@ -1,0 +1,128 @@
+"""Blockwise low-precision quantization — the paper's §V.B/§V.C subject.
+
+The paper enumerates mma datatypes e2m1 (FP4), e2m3/e3m2 (FP6), e4m3/e5m2
+(FP8) with e8m0 reserved for block-scale exponents (Tab V), and finds FP4
+falls back to the FP8 pipeline (QMMA) in current software.  The TPU
+adaptation (DESIGN.md §3): v5e's MXU has no sub-bf16 pipeline at all, so
+every format here is *storage* precision — weights are kept quantized with
+e8m0 (power-of-two) block scales and dequantized to bf16 on the way into
+the MXU.  ``repro.kernels.qmatmul`` fuses that dequant into the matmul's
+VMEM staging; this module is the numpy-level quantizer + the serving-stack
+integration (weight-only PTQ for the Tab VIII inference sweep).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+# name -> (container dtype, max finite magnitude, host rounding dtype).
+# JAX has native fp8/fp4 dtypes; fp6 has no jnp dtype, but every
+# e2m3/e3m2 value is exactly representable in e4m3 (narrower mantissa AND
+# exponent range), so fp6 rounds via ml_dtypes on the host and rides an
+# e4m3 container — numerically exact fp6, byte-aligned storage (the same
+# byte alignment a real accelerator's fp6 tiles use per the paper's Tab V
+# packing discussion).
+LOW_PRECISION_FORMATS: Dict[str, Tuple[Any, float, Any]] = {
+    "float8_e4m3fn": (jnp.float8_e4m3fn, 448.0, None),
+    "float8_e5m2": (jnp.float8_e5m2, 57344.0, None),
+    "float6_e2m3fn": (jnp.float8_e4m3fn, 7.5, ml_dtypes.float6_e2m3fn),
+    "float6_e3m2fn": (jnp.float8_e4m3fn, 28.0, ml_dtypes.float6_e3m2fn),
+    "float4_e2m1fn": (jnp.float4_e2m1fn, 6.0, None),
+}
+
+BLOCK = 32   # elements per scale block (matches mxfp4/mxfp6/mxfp8 spec)
+
+
+def _e8m0_scale(absmax: jax.Array, fmt_max: float) -> jax.Array:
+    """Power-of-two scale (e8m0 semantics): 2^ceil(log2(absmax/fmt_max))."""
+    absmax = jnp.maximum(absmax, 1e-30)
+    exp = jnp.ceil(jnp.log2(absmax / fmt_max))
+    return jnp.exp2(exp).astype(jnp.float32)
+
+
+def quantize_blockwise(w: jax.Array, fmt: str
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize along the last axis in blocks of ``BLOCK``.
+
+    Returns (q (..., n) in ``fmt``, scales (..., n/BLOCK) fp32 = powers of
+    two, i.e. e8m0 content).
+    """
+    dtype, fmt_max, round_dtype = LOW_PRECISION_FORMATS[fmt]
+    *lead, n = w.shape
+    assert n % BLOCK == 0, f"last dim {n} % {BLOCK} != 0"
+    wb = w.astype(jnp.float32).reshape(*lead, n // BLOCK, BLOCK)
+    scales = _e8m0_scale(jnp.max(jnp.abs(wb), axis=-1), fmt_max)
+    vals = wb / scales[..., None]
+    if round_dtype is not None:                # fp6: host rounding
+        vals = jnp.asarray(
+            np.asarray(vals).astype(round_dtype).astype(np.float32))
+    q = vals.astype(dtype)
+    return q.reshape(*lead, n), scales
+
+
+def dequantize_blockwise(q: jax.Array, scales: jax.Array,
+                         out_dtype=jnp.bfloat16) -> jax.Array:
+    *lead, n = q.shape
+    qb = q.astype(jnp.float32).reshape(*lead, n // BLOCK, BLOCK)
+    return (qb * scales[..., None]).reshape(*lead, n).astype(out_dtype)
+
+
+# --------------------------------------------------------------------- #
+# Weight-only PTQ over a parameter tree (Tab VIII serving sweep)
+# --------------------------------------------------------------------- #
+
+def _quantizable(path_names, leaf) -> bool:
+    if leaf.ndim < 2:
+        return False
+    if leaf.shape[-1] % BLOCK != 0:
+        return False
+    name = path_names[-1]
+    return name in ("w1", "w2", "w3", "wq", "wk", "wv", "wo", "embed",
+                    "unembed", "wz", "wx", "out_proj")
+
+
+def quantize_params(params: Any, fmt: str, compute_dtype=jnp.bfloat16
+                    ) -> Tuple[Any, dict]:
+    """Quantize-dequantize (weight-only, fake-quant) a parameter tree.
+
+    Returns (params', stats).  Mirrors what a deployed engine does with
+    ``repro.kernels.qmatmul`` keeping weights resident in ``fmt`` — here we
+    materialize the dequantized bf16 copy because the XLA path consumes
+    dense arrays; storage-byte accounting for the energy model uses
+    ``stats['quantized_bytes']``.
+    """
+    if fmt in ("float32", "bfloat16", "float16"):
+        cast = jax.tree.map(lambda w: w.astype(jnp.dtype(fmt))
+                            if w.ndim >= 2 else w, params)
+        nbytes = sum(x.nbytes for x in jax.tree.leaves(cast))
+        return cast, {"format": fmt, "quantized_bytes": nbytes,
+                      "n_quantized": 0, "mse": 0.0}
+
+    bits = {"float8_e4m3fn": 8, "float8_e5m2": 8, "float6_e2m3fn": 8,
+            "float6_e3m2fn": 8, "float4_e2m1fn": 4}[fmt]
+    n_q, q_bytes, mse_num, mse_den = 0, 0, 0.0, 0.0
+
+    def visit(path, leaf):
+        nonlocal n_q, q_bytes, mse_num, mse_den
+        names = tuple(str(getattr(k, "key", k)) for k in path)
+        if not _quantizable(names, leaf):
+            q_bytes += leaf.nbytes
+            return leaf
+        q, s = quantize_blockwise(leaf, fmt)
+        deq = dequantize_blockwise(q, s, compute_dtype)
+        n_q += 1
+        q_bytes += leaf.size * bits // 8 + s.nbytes
+        err = (deq.astype(jnp.float32) - leaf.astype(jnp.float32))
+        mse_num += float(jnp.sum(jnp.square(err)))
+        mse_den += float(jnp.sum(jnp.square(leaf.astype(jnp.float32))))
+        return deq
+
+    out = jax.tree_util.tree_map_with_path(visit, params)
+    return out, {"format": fmt, "quantized_bytes": int(q_bytes),
+                 "n_quantized": n_q,
+                 "mse": mse_num / max(mse_den, 1e-30)}

@@ -1,0 +1,22 @@
+"""Token samplers (fp32 logits in, int32 token out)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_token(logits: jax.Array, key: Optional[jax.Array] = None,
+                 temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """logits (b, v) -> tokens (b,).  temperature 0 = greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert key is not None, "sampling needs a PRNG key"
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[..., -1:]
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)

@@ -1,0 +1,10 @@
+"""Training substrate: loss, train step (grad-accum microbatching), loop."""
+
+from repro.train.step import (  # noqa: F401
+    cross_entropy_loss,
+    make_loss_fn,
+    make_train_step,
+    train_state_init,
+)
+from repro.train.loop import TrainLoopConfig, run_train_loop  # noqa: F401
+from repro.train.local_dp import make_local_dp_train_step  # noqa: F401

@@ -1,0 +1,84 @@
+"""Fault-tolerant training loop.
+
+Composes the substrate: stream -> jitted train_step -> metrics, with
+checkpoint/restart (resume-from-latest), async snapshots, straggler
+watchdog, and heartbeat — the parts of the 1000+-node posture a CPU
+container can actually exercise (and tests do).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.checkpoint import Checkpointer
+from repro.distributed.elastic import Heartbeat, StepWatchdog
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    checkpoint_dir: Optional[str] = None
+    async_checkpoint: bool = True
+    straggler_deadline_factor: float = 3.0
+
+
+def run_train_loop(
+    train_step: Callable,
+    state: Any,
+    stream,                       # object with .batch(step)
+    loop_cfg: TrainLoopConfig,
+    on_metrics: Optional[Callable[[int, Dict[str, float]], None]] = None,
+) -> Any:
+    """Runs to ``total_steps``; resumes from the latest checkpoint if one
+    exists in ``checkpoint_dir``.  Returns the final state."""
+    ckpt = None
+    start_step = 0
+    if loop_cfg.checkpoint_dir:
+        ckpt = Checkpointer(loop_cfg.checkpoint_dir,
+                            async_save=loop_cfg.async_checkpoint)
+        restored = ckpt.restore_latest(like=state)
+        if restored is not None:
+            state, start_step = restored
+            print(f"[train] resumed from step {start_step}")
+        hb = Heartbeat(loop_cfg.checkpoint_dir)
+    else:
+        hb = None
+
+    watchdog = StepWatchdog(loop_cfg.straggler_deadline_factor)
+    history: List[Dict[str, float]] = []
+
+    for step in range(start_step, loop_cfg.total_steps):
+        watchdog.start_step(step)
+        batch = stream.batch(step)
+        state, metrics = train_step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        event = watchdog.end_step()
+        if event is not None:
+            print(f"[train] straggler step {event.step}: "
+                  f"{event.duration_s:.3f}s vs median {event.median_s:.3f}s"
+                  f" — snapshotting")
+            if ckpt:
+                ckpt.save(state, step + 1, block=False)
+        if hb:
+            hb.beat(step)
+        if step % loop_cfg.log_every == 0 or step == loop_cfg.total_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, **m})
+            if on_metrics:
+                on_metrics(step, m)
+            else:
+                print(f"[train] step {step:5d} loss {m['loss']:.4f} "
+                      f"acc {m['acc']:.3f} gnorm {m['grad_norm']:.2f}")
+        if ckpt and (step + 1) % loop_cfg.checkpoint_every == 0:
+            ckpt.save(state, step + 1, block=False)
+
+    if ckpt:
+        ckpt.save(state, loop_cfg.total_steps, block=True)
+        ckpt.close()
+    return state, history

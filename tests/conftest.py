@@ -1,0 +1,19 @@
+import os
+
+# Tests must see the real single CPU device (the dry-run alone forces 512
+# fake devices, in its own subprocess).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

@@ -1,0 +1,111 @@
+"""Attention: chunked (flash-equivalent) vs full oracle, windows, softcaps,
+GQA, decode caches (ring buffers included)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+
+def _qkv(key, b=2, sq=64, skv=64, hq=4, hkv=2, d=16):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (b, sq, hq, d)),
+            jax.random.normal(ks[1], (b, skv, hkv, d)),
+            jax.random.normal(ks[2], (b, skv, hkv, d)))
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64, 48])
+def test_chunked_equals_full(key, chunk):
+    q, k, v = _qkv(key)
+    want = A.full_attention(q, k, v, causal=True)
+    got = A.chunked_attention(q, k, v, causal=True, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("window,softcap,causal", [
+    (16, None, True), (None, 20.0, True), (8, 10.0, True),
+    (None, None, False)])
+def test_chunked_flags(key, window, softcap, causal):
+    q, k, v = _qkv(key)
+    want = A.full_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap)
+    got = A.chunked_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5)
+
+
+def test_gqa_equals_repeated_kv(key):
+    """GQA must equal MHA with kv heads explicitly repeated."""
+    q, k, v = _qkv(key, hq=4, hkv=2)
+    want = A.full_attention(q, jnp.repeat(k, 2, axis=2),
+                            jnp.repeat(v, 2, axis=2))
+    got = A.full_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5)
+
+
+def test_window_masks_old_positions(key):
+    """With window=1 each query sees only itself."""
+    q, k, v = _qkv(key, hq=2, hkv=2)
+    got = A.full_attention(q, k, v, causal=True, window=1)
+    # softmax over a single visible position => output == v at that pos
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(v.astype(got.dtype)), atol=1e-5)
+
+
+def test_decode_attention_matches_full(key):
+    b, s, hq, hkv, d = 2, 16, 4, 2, 8
+    q, k, v = _qkv(key, b=b, sq=1, skv=s, hq=hq, hkv=hkv, d=d)
+    slot_pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    got = A.decode_attention(q, k, v, slot_pos, pos)
+    want = A.full_attention(q, k, v, causal=False)   # all slots visible
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5)
+
+
+def test_decode_attention_heterogeneous_positions(key):
+    """Rows at different positions mask independently."""
+    b, s, h, d = 2, 8, 2, 4
+    q, k, v = _qkv(key, b=b, sq=1, skv=s, hq=h, hkv=h, d=d)
+    slot_pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    pos = jnp.asarray([3, 7], jnp.int32)
+    got = A.decode_attention(q, k, v, slot_pos, pos)
+    # row 0 must equal attention over slots 0..3 only
+    want0 = A.full_attention(q[:1], k[:1, :4], v[:1, :4], causal=False)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want0[0]),
+                               atol=1e-5)
+
+
+def test_ring_cache_write_and_wrap(key):
+    cache = A.init_kv_cache(batch=1, capacity=4, n_kv=1, head_dim=2,
+                            dtype=jnp.float32)
+    for pos in range(6):
+        k = jnp.full((1, 1, 1, 2), float(pos))
+        cache = A.cache_write_decode(cache, k, k, jnp.asarray([pos]))
+    # capacity 4, positions 2..5 retained; slot = pos % 4
+    assert sorted(np.asarray(cache["slot_pos"])[0].tolist()) == [2, 3, 4, 5]
+    assert float(cache["k"][0, 5 % 4, 0, 0]) == 5.0
+
+
+def test_prefill_ring_cache_keeps_last_window(key):
+    k = jnp.arange(10, dtype=jnp.float32).reshape(1, 10, 1, 1)
+    cache = A.init_kv_cache(1, 4, 1, 1, jnp.float32)
+    cache = A.cache_write_prefill(cache, k, k)
+    held = sorted(np.asarray(cache["slot_pos"])[0].tolist())
+    assert held == [6, 7, 8, 9]
+    # slot layout consistent with pos % capacity
+    for slot in range(4):
+        p = int(cache["slot_pos"][0, slot])
+        assert p % 4 == slot
+        assert float(cache["k"][0, slot, 0, 0]) == float(p)
+
+
+def test_cache_capacity():
+    assert A.cache_capacity(1000, None) == 1000
+    assert A.cache_capacity(1000, 64) == 64
+    assert A.cache_capacity(32, 64) == 32

@@ -1,0 +1,70 @@
+"""Gradient compression: unbiasedness (hypothesis property test) and the
+compressed mean-psum under shard_map."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.compression import (
+    compressed_psum_tree, quantize, stochastic_round)
+from repro.serve.quant import dequantize_blockwise, quantize_blockwise
+
+
+@given(st.floats(-100.0, 100.0), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_stochastic_round_unbiased(value, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 256)
+    x = jnp.full((8,), value)
+    samples = jnp.stack([stochastic_round(x, k) for k in keys])
+    est = float(jnp.mean(samples))
+    assert abs(est - value) < 0.15, (value, est)
+
+
+def test_quantize_dequantize_error_bound(key):
+    g = jax.random.normal(key, (64, 64)) * 3.0
+    q, scale = quantize(g, key, qmax=127)
+    deq = q.astype(jnp.float32) * scale
+    assert float(jnp.abs(deq - g).max()) <= float(scale) + 1e-6
+
+
+def test_compressed_psum_mean(key):
+    """shard_map over the single CPU device (world=1): the compressed mean
+    must equal the plain mean to quantization error."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax import shard_map
+    mesh = Mesh(np.array(jax.devices()).reshape(1), ("data",))
+    g = jax.random.normal(key, (4, 8))
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(P(), P()), out_specs=P())
+    def run(g, k):
+        return compressed_psum_tree({"g": g}, k, "data", world=1)["g"]
+
+    out = run(g, key)
+    scale = float(jnp.abs(g).max()) / 127
+    assert float(jnp.abs(out - g).max()) <= scale + 1e-6
+
+
+@pytest.mark.parametrize("fmt,tol", [
+    ("float8_e4m3fn", 0.07), ("float8_e5m2", 0.14),
+    ("float6_e2m3fn", 0.13), ("float6_e3m2fn", 0.26),
+    ("float4_e2m1fn", 0.5)])
+def test_block_quant_roundtrip_bound(key, fmt, tol):
+    """Blockwise e8m0 quantization: relative error bounded by the format's
+    relative resolution (paper §V.C precision/expressiveness trade-off)."""
+    w = jax.random.normal(key, (32, 256))
+    q, s = quantize_blockwise(w, fmt)
+    deq = dequantize_blockwise(q, s, jnp.float32)
+    rel = float(jnp.abs(deq - w).max() / jnp.abs(w).max())
+    assert rel < tol, (fmt, rel)
+
+
+def test_e8m0_scales_are_powers_of_two(key):
+    w = jax.random.normal(key, (8, 64))
+    _, s = quantize_blockwise(w, "float8_e4m3fn")
+    log2 = np.log2(np.asarray(s))
+    np.testing.assert_allclose(log2, np.round(log2), atol=1e-6)

@@ -1,0 +1,114 @@
+"""Core characterization layer: probes (smoke on CPU), roofline, energy,
+autotune, timing, report."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GB203, GH100, HOST_CPU, TPU_V5E, build_report,
+                        get_device_model, model_flops_dense, time_fn)
+from repro.core.energy import ENERGY_PER_FLOP_PJ, estimate, matmul_energy
+from repro.core.hlo_analysis import CollectiveStats, CompiledStats, \
+    HloStructure
+
+
+def _stats(flops=1e12, bytes_=1e9, coll=1e8):
+    cs = CollectiveStats(total_bytes=coll)
+    return CompiledStats(flops=flops, bytes_accessed=bytes_,
+                         collectives=cs, structure=HloStructure())
+
+
+def test_roofline_dominance():
+    r = build_report("c", _stats(flops=1e15, bytes_=1.0, coll=1.0),
+                     TPU_V5E, chips=256)
+    assert r.dominant == "compute"
+    r = build_report("m", _stats(flops=1.0, bytes_=1e12, coll=1.0),
+                     TPU_V5E, chips=256)
+    assert r.dominant == "memory"
+    r = build_report("x", _stats(flops=1.0, bytes_=1.0, coll=1e12),
+                     TPU_V5E, chips=256)
+    assert r.dominant == "collective"
+
+
+def test_roofline_terms_values():
+    r = build_report("t", _stats(flops=197e12, bytes_=819e9, coll=200e9),
+                     TPU_V5E, chips=1)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.collective_s == pytest.approx(1.0)
+
+
+def test_mfu_bounded_when_flops_counted_right():
+    """useful flops <= compiled flops => mfu <= roofline fraction <= 1."""
+    model_fl = 6e9 * 1e6
+    r = build_report("t", _stats(flops=model_fl / 256 * 1.2,
+                                 bytes_=1e9, coll=1e8),
+                     TPU_V5E, chips=256, model_flops=model_fl)
+    assert 0 < r.mfu <= 1.0
+    assert 0 < r.useful_ratio <= 1.0
+
+
+def test_device_registry():
+    assert get_device_model("tpu-v5e").peak_flops["bfloat16"] == 197e12
+    assert GB203.peak_flops["float4_e2m1fn"] > GB203.peak_flops["float8_e4m3fn"]
+    with pytest.raises(KeyError):
+        get_device_model("nope")
+
+
+def test_fp8_fallback_on_tpu():
+    """v5e has no fp8 pipeline: peak falls back to bf16 (the paper's QMMA
+    fallback story)."""
+    assert TPU_V5E.peak_flops_for("float8_e4m3fn") == \
+        TPU_V5E.peak_flops_for("bfloat16")
+
+
+def test_energy_precision_staircase():
+    """Paper Tab VI ordering: FP4 < FP6 < FP8 < BF16 energy at iso-work."""
+    joules = {}
+    for fmt in ("float4_e2m1fn", "float6_e2m3fn", "float8_e4m3fn",
+                "bfloat16"):
+        joules[fmt] = estimate(GB203, flops=1e12, dtype=fmt,
+                               seconds=1.0).joules
+    assert joules["float4_e2m1fn"] < joules["float6_e2m3fn"] \
+        < joules["float8_e4m3fn"] < joules["bfloat16"]
+
+
+def test_energy_tdp_clamp():
+    e = estimate(GB203, flops=1e18, dtype="bfloat16", seconds=1e-3)
+    assert e.total_watts <= GB203.peak_watts
+
+
+def test_matmul_energy_grows_with_size():
+    e1 = matmul_energy(TPU_V5E, 1024, 1024, 1024, "bfloat16")
+    e2 = matmul_energy(TPU_V5E, 8192, 8192, 8192, "bfloat16")
+    assert e2.joules > e1.joules * 100
+
+
+def test_time_fn_measures():
+    r = time_fn(lambda: jnp.sum(jnp.ones((256, 256))), iters=5, warmup=2)
+    assert r.median_s > 0
+    assert r.iters == 5
+
+
+def test_autotune_block_pick():
+    from repro.core.autotune import pick_matmul_block
+    c = pick_matmul_block(TPU_V5E, 4096, 4096, 4096)
+    assert c.bm % 128 == 0 and c.bn % 128 == 0 and c.bk % 128 == 0
+    vmem = TPU_V5E.level("vmem").capacity_bytes
+    assert c.vmem_bytes <= vmem
+
+
+def test_probes_smoke():
+    """Probe suite runs on CPU (methodology validation, tiny sizes)."""
+    from repro.core.probes import compute, memory, precision
+    import math
+    r = compute.measure_latency("int32", chain=256, iters=3)
+    # timer-overhead subtraction can clamp tiny chains to ~0 on a fast
+    # host; finiteness + non-negativity is the CPU-smoke contract
+    assert math.isfinite(r.true_ns) and r.true_ns >= 0
+    assert math.isfinite(r.completion_ns)
+    curve = memory.chase_curve(sizes=(4096, 65536), steps=2048, iters=3)
+    assert len(curve) == 2 and curve[0].ns_per_load > 0
+    sup = precision.support_matrix()
+    names = {s.fmt for s in sup}
+    assert "e4m3" in names and "e2m1" in names

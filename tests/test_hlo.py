@@ -1,0 +1,110 @@
+"""HLO analysis: collective parser, structure profile, and the loop-aware
+cost model (validated against ground-truth FLOP counts)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlo_analysis import (analyze_compiled, parse_collectives,
+                                     parse_structure, shape_bytes)
+from repro.core.hlo_cost import analyze_hlo_text
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[4,8]") == 128
+    assert shape_bytes("bf16[10]") == 20
+    assert shape_bytes("f8e4m3fn[16]") == 16
+    assert shape_bytes("(f32[2,2], s32[3])") == 28
+    assert shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_synthetic():
+    hlo = """
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), replica_groups={}
+  %ag.1 = f32[64,128]{1,0} all-gather(f32[4,128]{1,0} %y), dimensions={0}
+  %ars = f32[8] all-reduce-start(f32[8] %z)
+  %ard = f32[8] all-reduce-done(f32[8] %ars)
+"""
+    stats = parse_collectives(hlo)
+    assert stats.count_by_kind["all-reduce"] == 2     # start counted once
+    assert stats.count_by_kind["all-gather"] == 1
+    assert stats.bytes_by_kind["all-reduce"] == 1024 * 4 + 32
+    assert stats.bytes_by_kind["all-gather"] == 4 * 128 * 4
+
+
+def test_parse_structure():
+    hlo = """
+  %f = f32[8] fusion(f32[8] %a), kind=kLoop, calls=%fc
+  %d = f32[8,8] dot(f32[8,4] %x, f32[4,8] %y), metadata={op_name="m/dot"}
+  %r = f32[64] reshape(f32[8,8] %d), metadata={op_name="m/dot"}
+  %w = (s32[]) while((s32[]) %t), condition=%c, body=%b
+"""
+    s = parse_structure(hlo)
+    assert s.n_fusions == 1 and s.n_dots == 1 and s.n_while == 1
+    assert s.n_reshapes == 1
+    assert s.remat_duplicate_ops == 1     # op_name "m/dot" seen twice
+
+
+def test_loop_aware_flops_scan_matmul(key):
+    n, trips = 128, 9
+
+    def f(x):
+        def body(c, _):
+            return c @ x, None
+        out, _ = jax.lax.scan(body, x, None, length=trips)
+        return out
+
+    x = jax.random.normal(key, (n, n))
+    compiled = jax.jit(f).lower(x).compile()
+    cost = analyze_hlo_text(compiled.as_text())
+    want = trips * 2 * n ** 3
+    assert abs(cost.flops - want) / want < 0.05, (cost.flops, want)
+
+
+def test_loop_aware_beats_xla_costanalysis(key):
+    """The whole reason hlo_cost exists: XLA counts loop bodies once."""
+    n, trips = 64, 50
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ x), None
+        out, _ = jax.lax.scan(body, x, None, length=trips)
+        return out
+
+    x = jax.random.normal(key, (n, n))
+    compiled = jax.jit(f).lower(x).compile()
+    stats = analyze_compiled(compiled)
+    want = trips * 2 * n ** 3
+    assert abs(stats.flops - want) / want < 0.1
+    # raw XLA number misses the loop multiplier
+    assert stats.xla_flops < stats.flops / 5
+
+
+def test_nested_scan_flops(key):
+    n, inner, outer = 32, 4, 6
+
+    def f(x):
+        def outer_body(c, _):
+            def inner_body(d, _):
+                return d @ x, None
+            d, _ = jax.lax.scan(inner_body, c, None, length=inner)
+            return d, None
+        out, _ = jax.lax.scan(outer_body, x, None, length=outer)
+        return out
+
+    x = jax.random.normal(key, (n, n))
+    compiled = jax.jit(f).lower(x).compile()
+    cost = analyze_hlo_text(compiled.as_text())
+    want = outer * inner * 2 * n ** 3
+    assert abs(cost.flops - want) / want < 0.1
+
+
+def test_bytes_nonzero_and_dominated_by_args(key):
+    def f(x):
+        return jnp.sum(x * 2.0)
+    x = jax.random.normal(key, (1024, 1024))
+    compiled = jax.jit(f).lower(x).compile()
+    cost = analyze_hlo_text(compiled.as_text())
+    assert cost.bytes >= x.nbytes            # at least reads the input
+    assert cost.bytes < 8 * x.nbytes         # but not wildly inflated

@@ -1,0 +1,93 @@
+"""Unit tests for the primitive layer library."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def test_rms_norm_unit_variance(key):
+    x = jax.random.normal(key, (4, 64)) * 7.0 + 3.0
+    w = jnp.ones((64,))
+    y = L.rms_norm(w, x)
+    ms = jnp.mean(jnp.square(y), axis=-1)
+    np.testing.assert_allclose(np.asarray(ms), 1.0, rtol=0.05)
+
+
+def test_rms_norm_gemma_style_matches_plus_one(key):
+    x = jax.random.normal(key, (2, 32))
+    w = jax.random.normal(key, (32,)) * 0.1
+    a = L.rms_norm(w, x, gemma_style=True)
+    b = L.rms_norm(1.0 + w, x, gemma_style=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_rope_preserves_norm_and_relative_phase(key):
+    x = jax.random.normal(key, (1, 8, 2, 64))
+    pos = jnp.arange(8)
+    y = L.apply_rope(x, pos, theta=10000.0)
+    # rotation preserves the per-pair norm
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # dot(q_i, k_j) depends only on i - j
+    q = L.apply_rope(x, pos, 10000.0)
+    k = L.apply_rope(x, pos, 10000.0)
+    d01 = jnp.einsum("d,d->", q[0, 3, 0], k[0, 2, 0])
+    q2 = L.apply_rope(x, pos + 11, 10000.0)
+    k2 = L.apply_rope(x, pos + 11, 10000.0)
+    d01_shift = jnp.einsum("d,d->", q2[0, 3, 0], k2[0, 2, 0])
+    np.testing.assert_allclose(float(d01), float(d01_shift), rtol=1e-4)
+
+
+def test_rope_position_zero_is_identity(key):
+    x = jax.random.normal(key, (1, 1, 1, 32))
+    y = L.apply_rope(x, jnp.zeros((1,), jnp.int32), 10000.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+@pytest.mark.parametrize("variant", ["swiglu", "geglu", "gelu"])
+def test_mlp_variants(key, variant):
+    p = L.init_mlp(key, 32, 64, variant, jnp.float32)
+    x = jax.random.normal(key, (2, 5, 32))
+    y = L.apply_mlp(p, x, variant)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    n_weights = 3 if variant in ("swiglu", "geglu") else 2
+    assert len(p) == n_weights
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = L.softcap(x, 30.0)
+    assert float(jnp.max(jnp.abs(y))) <= 30.0
+    # near-linear for small inputs
+    np.testing.assert_allclose(float(L.softcap(jnp.asarray(0.1), 30.0)),
+                               0.1, rtol=1e-3)
+    assert L.softcap(x, None) is x
+
+
+def test_causal_conv1d_matches_numpy(key):
+    x = jax.random.normal(key, (2, 10, 3))
+    w = jax.random.normal(key, (3, 4))
+    b = jax.random.normal(key, (3,))
+    y = L.causal_conv1d(x, w, b)
+    xp = np.pad(np.asarray(x), ((0, 0), (3, 0), (0, 0)))
+    want = np.zeros((2, 10, 3))
+    for t in range(10):
+        for c in range(3):
+            want[:, t, c] = (xp[:, t:t + 4, c] * np.asarray(w)[c]).sum(-1) \
+                + float(b[c])
+    np.testing.assert_allclose(np.asarray(y), want, atol=1e-5)
+
+
+def test_embed_unembed_tied_shapes(key):
+    w = jax.random.normal(key, (100, 16))
+    tok = jnp.asarray([[1, 2, 3]])
+    x = L.embed(w, tok)
+    assert x.shape == (1, 3, 16)
+    logits = L.unembed(w.T, x, softcap=30.0)
+    assert logits.shape == (1, 3, 100)
+    assert float(jnp.max(jnp.abs(logits))) <= 30.0

@@ -1,0 +1,83 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import chunked_attention, full_attention
+from repro.models.ssm import ssd_chunked, ssd_reference
+from repro.data.packing import pack_documents
+from repro.core import TPU_V5E, build_report
+from repro.core.hlo_analysis import (CollectiveStats, CompiledStats,
+                                     HloStructure)
+
+_settings = dict(max_examples=12, deadline=None)
+
+
+@given(chunk=st.integers(1, 48), seed=st.integers(0, 10))
+@settings(**_settings)
+def test_online_softmax_chunk_invariance(chunk, seed):
+    """Chunked attention is invariant to the chunk size (online-softmax
+    associativity) — the core flash-attention correctness property."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 8))
+    k = jax.random.normal(ks[1], (1, 32, 2, 8))
+    v = jax.random.normal(ks[2], (1, 32, 2, 8))
+    got = chunked_attention(q, k, v, causal=True, chunk=chunk)
+    want = full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+@given(chunk=st.sampled_from([4, 8, 16, 32]), seed=st.integers(0, 10))
+@settings(**_settings)
+def test_ssd_chunk_invariance(chunk, seed):
+    """SSD chunked form equals the sequential recurrence for any chunk."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    s = 32
+    x = jax.random.normal(ks[0], (1, s, 2, 4)) * 0.5
+    dt_a = -jnp.abs(jax.random.normal(ks[1], (1, s, 2))) * 0.3
+    b = jax.random.normal(ks[2], (1, s, 4)) * 0.5
+    c = jax.random.normal(ks[3], (1, s, 4)) * 0.5
+    y1, s1 = ssd_chunked(x, dt_a, b, c, chunk)
+    y2, s2 = ssd_reference(x, dt_a, b, c)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=3e-4)
+
+
+@given(st.lists(st.integers(1, 20), min_size=1, max_size=12),
+       st.integers(8, 32))
+@settings(**_settings)
+def test_packing_preserves_tokens(doc_lens, seq_len):
+    docs = [np.arange(1, n + 1) + 100 * i for i, n in enumerate(doc_lens)]
+    tokens, mask, seg = pack_documents(docs, seq_len)
+    got = sorted(int(t) for t in tokens.flatten() if t != 0)
+    want = sorted(int(x) for d in docs for x in d)
+    assert got == want
+    # masked fraction sane: first token of each doc chunk is masked out
+    assert mask.sum() <= tokens.astype(bool).sum()
+
+
+@given(st.floats(1e6, 1e15), st.floats(1e3, 1e12), st.floats(0, 1e12))
+@settings(**_settings)
+def test_roofline_bound_is_max_term(fl, by, co):
+    cs = CompiledStats(flops=fl, bytes_accessed=by,
+                       collectives=CollectiveStats(total_bytes=co),
+                       structure=HloStructure())
+    r = build_report("x", cs, TPU_V5E, chips=16)
+    assert r.bound_s == pytest.approx(
+        max(r.compute_s, r.memory_s, r.collective_s))
+    assert r.terms()[r.dominant] == pytest.approx(r.bound_s)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**_settings)
+def test_quantize_blockwise_scale_covers_range(seed):
+    """No quantized value overflows its format's max after block scaling."""
+    from repro.serve.quant import LOW_PRECISION_FORMATS, quantize_blockwise
+    w = jax.random.normal(jax.random.PRNGKey(seed), (4, 64)) * 100
+    for fmt, (dtype, fmax, _) in LOW_PRECISION_FORMATS.items():
+        q, s = quantize_blockwise(w, fmt)
+        assert bool(jnp.isfinite(q.astype(jnp.float32)).all()), fmt
+        assert float(jnp.abs(q.astype(jnp.float32)).max()) <= fmax

@@ -1,0 +1,113 @@
+"""Sharding rules: coverage, divisibility fallbacks, cache spill rules,
+local-bytes accounting.  Uses fake meshes built from abstract devices via
+mesh shape arithmetic only (no XLA device requirement beyond CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_config, get_shape
+from repro.distributed import sharding as shd
+from repro.models import build_model
+from repro.models.model import decode_inputs_spec
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape and .axis_names are consulted by the
+    rule functions."""
+
+    def __init__(self, shape_map):
+        self.shape = shape_map
+        self.axis_names = tuple(shape_map)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("mesh", [MESH1, MESH2], ids=["1pod", "2pod"])
+@pytest.mark.parametrize("arch", [c.name for c in ASSIGNED])
+def test_param_specs_cover_and_divide(arch, mesh):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = shd.param_specs(cfg, mesh, shapes)
+    n_checked = 0
+    for leaf, spec in zip(jax.tree.leaves(shapes),
+                          jax.tree.leaves(
+                              specs, is_leaf=lambda x: isinstance(x, P))):
+        assert isinstance(spec, P)
+        assert len(tuple(spec)) == len(leaf.shape), (leaf.shape, spec)
+        for dim, axes in zip(leaf.shape, tuple(spec)):
+            if axes is None:
+                continue
+            size = shd.axis_size(mesh, axes)
+            assert dim % size == 0, (arch, leaf.shape, spec)
+            n_checked += 1
+    assert n_checked > 0
+
+
+def test_fsdp_shards_big_archs():
+    """>=52B archs must come out with per-device param bytes < HBM."""
+    for arch in ("jamba-v0.1-52b", "kimi-k2-1t-a32b",
+                 "llama4-maverick-400b-a17b"):
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        specs = shd.param_specs(cfg, MESH2, shapes)
+        local = shd.spec_local_bytes(shapes, specs, MESH2)
+        assert local < 8 * 2**30, f"{arch}: {local/2**30:.1f} GiB/device"
+
+
+def test_head_fallback_to_data_axis():
+    """llama3.2 (24 q-heads, 16-way model axis): attention weights must
+    shard d_model on data instead of replicating."""
+    cfg = get_config("llama3.2-3b")
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = shd.param_specs(cfg, MESH1, shapes)
+    wq_spec = specs["layers"]["pos0"]["attn"]["wq"]
+    assert tuple(wq_spec)[1] == "data"     # (period, D, H, hd): D on data
+    assert tuple(wq_spec)[2] is None       # heads replicated
+
+
+def test_kv_cache_seq_spill():
+    """kv_heads=8 on model=16 -> cache seq dim takes the model axis."""
+    cfg = get_config("llama3.2-3b")
+    shape = get_shape("decode_32k")
+    cache_shapes, _, _ = decode_inputs_spec(cfg, shape)
+    specs = shd.cache_specs(cfg, MESH1, cache_shapes)
+    k_spec = specs["pos0"]["kv"]["k"]
+    assert tuple(k_spec)[2] in ("model", ("model",))   # seq -> model
+    assert tuple(k_spec)[3] is None            # heads replicated
+    # batch 128 shardable on data
+    assert tuple(k_spec)[1] in ("data", ("data",))
+
+
+def test_kv_cache_long_context_spill():
+    """batch=1 long_500k -> seq takes data (+model when heads can't)."""
+    cfg = get_config("gemma2-2b")              # kv=4 not divisible by 16
+    shape = get_shape("long_500k")
+    cache_shapes, _, _ = decode_inputs_spec(cfg, shape)
+    specs = shd.cache_specs(cfg, MESH1, cache_shapes)
+    # find a global-attention kv leaf
+    k_spec = specs["pos1"]["kv"]["k"]
+    assert tuple(k_spec)[1] is None            # batch 1
+    assert set(tuple(k_spec)[2]) == {"data", "model"}
+
+
+def test_spec_local_bytes():
+    shapes = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32)}
+    specs = {"w": P("data", "model")}
+    n = shd.spec_local_bytes(shapes, specs, MESH1)
+    assert n == (64 // 16) * (32 // 16) * 4
+
+
+def test_batch_specs():
+    from repro.models.model import batch_fields
+    cfg = get_config("qwen2.5-3b")
+    shape = get_shape("train_4k")
+    specs = shd.batch_specs(cfg, shape, MESH2, batch_fields(cfg, shape))
+    assert tuple(specs["tokens"])[0] == ("pod", "data")

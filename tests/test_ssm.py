@@ -1,0 +1,80 @@
+"""Mamba-2 SSD: chunked form vs sequential recurrence, padding identity,
+decode step, full block."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import MAMBA2_2P7B
+from repro.models import ssm as S
+
+
+def _inputs(key, bt=2, s=64, h=3, p=8, n=4):
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (bt, s, h, p)) * 0.5
+    dt_a = -jnp.abs(jax.random.normal(ks[1], (bt, s, h))) * 0.2
+    b = jax.random.normal(ks[2], (bt, s, n)) * 0.5
+    c = jax.random.normal(ks[3], (bt, s, n)) * 0.5
+    return x, dt_a, b, c
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_chunked_equals_sequential(key, chunk):
+    x, dt_a, b, c = _inputs(key)
+    y1, s1 = S.ssd_chunked(x, dt_a, b, c, chunk)
+    y2, s2 = S.ssd_reference(x, dt_a, b, c)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4)
+
+
+def test_initial_state_chaining(key):
+    """Processing [first half; second half with carry] == full sequence."""
+    x, dt_a, b, c = _inputs(key, s=64)
+    y_full, s_full = S.ssd_chunked(x, dt_a, b, c, 16)
+    y1, s1 = S.ssd_chunked(x[:, :32], dt_a[:, :32], b[:, :32], c[:, :32], 16)
+    y2, s2 = S.ssd_chunked(x[:, 32:], dt_a[:, 32:], b[:, 32:], c[:, 32:],
+                           16, initial_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=2e-4)
+
+
+def test_block_forward_and_padding(key):
+    cfg = MAMBA2_2P7B.reduced()
+    p = S.init_ssm(key, cfg, jnp.float32)
+    # s=40 not a multiple of chunk 32 -> identity-padding path
+    x = jax.random.normal(key, (2, 40, cfg.d_model)) * 0.1
+    y = S.ssm_forward(p, x, cfg)
+    assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+    # padding must not change earlier outputs: compare vs s=32 prefix
+    y32 = S.ssm_forward(p, x[:, :32], cfg)
+    np.testing.assert_allclose(np.asarray(y[:, :32]), np.asarray(y32),
+                               atol=1e-5)
+
+
+def test_decode_matches_forward(key):
+    cfg = MAMBA2_2P7B.reduced()
+    p = S.init_ssm(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 24, cfg.d_model)) * 0.1
+    y_full, (conv_state, ssm_state) = S.ssm_forward(p, x[:, :16], cfg,
+                                                    return_state=True)
+    cache = {"conv": conv_state, "state": ssm_state}
+    outs = []
+    for t in range(16, 24):
+        y_t, cache = S.ssm_decode(p, x[:, t:t + 1], cache, cfg)
+        outs.append(y_t)
+    want = S.ssm_forward(p, x, cfg)[:, 16:]
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+def test_decay_is_contraction(key):
+    """dt*A < 0 => zero-input state decays monotonically."""
+    x, dt_a, b, c = _inputs(key, s=32)
+    init = jnp.ones((2, 3, 8, 4))
+    _, s_out = S.ssd_chunked(jnp.zeros_like(x), dt_a, jnp.zeros_like(b),
+                             c, 16, initial_state=init)
+    assert float(jnp.max(jnp.abs(s_out))) < 1.0
