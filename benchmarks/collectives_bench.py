@@ -31,7 +31,7 @@ def run(quick: bool = False) -> BenchResult:
     from repro.distributed.compression import compressed_psum_tree
     import numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
     g = jnp.zeros((1 << 18,), jnp.float32)
 

@@ -40,12 +40,16 @@ def table(headers: Sequence[str], rows: Sequence[Sequence[Any]]) -> str:
 
 
 def write_report(results: Sequence[BenchResult],
-                 path: str = "results/characterization.md") -> None:
+                 path: str = "results/characterization.md",
+                 preamble: str = "") -> None:
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
         f.write("# Characterization report (paper-table analogues)\n\n"
                 "Backend: CPU container (methodology validation); "
                 "TPU v5e numbers are model-derived where flagged.\n\n")
+        if preamble:
+            f.write("## Capability report (repro.compat)\n\n```\n"
+                    + preamble.strip() + "\n```\n\n")
         for r in results:
             f.write(f"## {r.name} — {r.paper_ref}\n\n")
             if r.notes:

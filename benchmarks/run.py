@@ -13,6 +13,7 @@ import sys
 import time
 
 from benchmarks.common import write_report
+from repro import compat
 
 MODULES = [
     "tab3_latency",
@@ -37,6 +38,10 @@ def main() -> None:
     ap.add_argument("--report", default="results/characterization.md")
     args = ap.parse_args()
 
+    # capability header: every artifact records native vs. emulated paths
+    compat_header = str(compat.report())
+    print(compat_header)
+
     results = []
     failures = []
     for name in MODULES:
@@ -59,7 +64,7 @@ def main() -> None:
         results.append(res)
 
     if results:
-        write_report(results, args.report)
+        write_report(results, args.report, preamble=compat_header)
         print(f"bench,report,path={args.report}")
     if failures:
         print(f"bench,failures,n={len(failures)}", file=sys.stderr)

@@ -5,12 +5,17 @@ matmul/precision, §VI memory hierarchy.
     PYTHONPATH=src python examples/characterize.py
 """
 
+from repro import compat
 from repro.core import detect_backend_model
 from repro.core.probes import compute, matmul, memory, precision
 from repro.core.report import dataclass_table
 
 
 def main() -> None:
+    # capability header: records which paths run native vs. emulated
+    print(compat.report())
+    print()
+
     dev = detect_backend_model()
     print(f"backend device model: {dev.name} "
           f"(clock {dev.clock_hz/1e9:.2f} GHz)\n")

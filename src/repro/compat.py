@@ -1,0 +1,365 @@
+"""Capability detection + compatibility layer (the portability tentpole).
+
+The paper's methodology is *portable* characterization: drop the probe
+suite on a device and report what that device actually supports — which
+mma formats are native vs. emulated, which pipeline a dot really lowers
+to, and so on.  This module applies the same philosophy to the software
+stack the reproduction runs on:
+
+* **JAX version probing** — the repo targets current Pallas/TPU APIs but
+  must degrade gracefully on older/newer installs (``pltpu.CompilerParams``
+  vs ``pltpu.TPUCompilerParams``; ``check_vma`` vs ``check_rep``).
+* **Low-precision dtype registry** — fp8/fp6/fp4 availability differs per
+  JAX version.  Every format resolves to a *container* dtype JAX can hold
+  plus an optional ``ml_dtypes`` host-rounding dtype, so fp4 degrades to
+  fp4-rounded values in an fp8 container instead of an import crash
+  (numerically exact fp4, byte-aligned storage — same story as the fp6
+  containers the seed already used).
+* **shard_map resolution** — ``jax.shard_map`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` (older), with kwarg
+  translation between ``check_vma`` and ``check_rep``.
+* **pallas_call wrapper** — transparently selects native Mosaic
+  compilation on TPU vs ``interpret=True`` everywhere else, and builds
+  ``compiler_params`` through whichever class this JAX exposes.
+* **``report()``** — a machine-readable capability report printed at the
+  top of every benchmark artifact so each measurement records which paths
+  ran native vs. emulated.
+
+Everything here probes *lazily* and caches: importing this module never
+touches a device or raises on a missing feature.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib.util
+import inspect
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+__all__ = [
+    "jax_version",
+    "backend_platform",
+    "is_tpu",
+    "DTypeSpec",
+    "dtype_spec",
+    "dtype_registry",
+    "available_formats",
+    "format_bits",
+    "shard_map",
+    "resolve_shard_map",
+    "pallas_interpret_default",
+    "tpu_compiler_params",
+    "pallas_call",
+    "has_hypothesis",
+    "CompatReport",
+    "report",
+]
+
+
+# --------------------------------------------------------------------- #
+# Version / backend probing
+# --------------------------------------------------------------------- #
+
+@functools.lru_cache(maxsize=None)
+def jax_version() -> Tuple[int, ...]:
+    """Installed JAX version as a comparable int tuple, e.g. (0, 4, 37)."""
+    parts: List[int] = []
+    for tok in jax.__version__.split("."):
+        digits = "".join(c for c in tok if c.isdigit())
+        if not digits:
+            break
+        parts.append(int(digits))
+    return tuple(parts) or (0,)
+
+
+@functools.lru_cache(maxsize=None)
+def backend_platform() -> str:
+    """Default-backend platform string: 'tpu' | 'gpu' | 'cpu'."""
+    try:
+        return jax.devices()[0].platform
+    except Exception:
+        return "cpu"
+
+
+def is_tpu() -> bool:
+    return backend_platform() == "tpu"
+
+
+# --------------------------------------------------------------------- #
+# Low-precision dtype registry
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class DTypeSpec:
+    """How one paper format (Tab IV/V) is actually stored on this stack.
+
+    ``container`` is a dtype JAX arrays can hold; ``round_dtype`` (an
+    ``ml_dtypes`` dtype, host-side) is set when values must be rounded to
+    the true format before entering the container — i.e. the format is
+    *emulated*: numerically exact in a wider, byte-aligned box.
+    ``native`` means the container IS the format (no emulation).
+    """
+
+    name: str                # canonical name, e.g. "float4_e2m1fn"
+    bits: int                # true format width (storage accounting)
+    max_finite: float        # format's largest finite magnitude
+    container: Any           # jnp-compatible dtype holding the values
+    round_dtype: Optional[Any]   # ml_dtypes dtype for host rounding
+    native: bool             # container == format in this JAX
+
+    @property
+    def emulated(self) -> bool:
+        return not self.native
+
+    def describe(self) -> str:
+        if self.native:
+            return "native"
+        return (f"emulated ({np.dtype(self.container).name} container, "
+                f"{'host-rounded' if self.round_dtype is not None else 'exact'})")
+
+
+def _jnp_dtype(name: str):
+    """jnp.<name> if this JAX registers it as a real array dtype."""
+    import jax.numpy as jnp
+
+    dt = getattr(jnp, name, None)
+    if dt is None:
+        return None
+    try:                      # probe: can JAX actually hold an array of it?
+        np.zeros(1, dtype=np.dtype(dt))
+        jnp.zeros((1,), dtype=dt)
+    except Exception:
+        return None
+    return dt
+
+
+@functools.lru_cache(maxsize=None)
+def dtype_registry() -> Dict[str, DTypeSpec]:
+    """name -> DTypeSpec for every paper format, probed once per process.
+
+    Fallback ladder per format: native jnp dtype -> fp8 e4m3 container
+    with ml_dtypes host rounding (every fp6/fp4 value is exactly
+    representable in e4m3: narrower mantissa AND exponent range).
+    """
+    import jax.numpy as jnp
+
+    e4m3 = _jnp_dtype("float8_e4m3fn") or jnp.bfloat16
+
+    # name, bits, max_finite, ml_dtypes rounding dtype used when the
+    # format has no native jnp dtype and must round on the host
+    table = [
+        ("float8_e4m3fn", 8, 448.0, ml_dtypes.float8_e4m3fn),
+        ("float8_e5m2", 8, 57344.0, ml_dtypes.float8_e5m2),
+        ("float6_e2m3fn", 6, 7.5, ml_dtypes.float6_e2m3fn),
+        ("float6_e3m2fn", 6, 28.0, ml_dtypes.float6_e3m2fn),
+        ("float4_e2m1fn", 4, 6.0, ml_dtypes.float4_e2m1fn),
+    ]
+    reg: Dict[str, DTypeSpec] = {}
+    for name, bits, fmax, round_dt in table:
+        native = _jnp_dtype(name)
+        if native is not None:
+            reg[name] = DTypeSpec(name=name, bits=bits, max_finite=fmax,
+                                  container=native, round_dtype=None,
+                                  native=True)
+        else:
+            reg[name] = DTypeSpec(name=name, bits=bits, max_finite=fmax,
+                                  container=e4m3, round_dtype=round_dt,
+                                  native=False)
+    return reg
+
+
+def dtype_spec(name: str) -> DTypeSpec:
+    try:
+        return dtype_registry()[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown low-precision format {name!r}; known: "
+            f"{sorted(dtype_registry())}") from None
+
+
+def available_formats() -> Tuple[str, ...]:
+    return tuple(dtype_registry())
+
+
+def format_bits(name: str) -> int:
+    return dtype_spec(name).bits
+
+
+# --------------------------------------------------------------------- #
+# shard_map resolution
+# --------------------------------------------------------------------- #
+
+@functools.lru_cache(maxsize=None)
+def resolve_shard_map() -> Tuple[Callable, str]:
+    """(shard_map callable, where it came from)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn, "jax.shard_map"
+    from jax.experimental.shard_map import shard_map as fn  # noqa: F811
+    return fn, "jax.experimental.shard_map"
+
+
+@functools.lru_cache(maxsize=None)
+def _shard_map_params() -> frozenset:
+    fn, _ = resolve_shard_map()
+    try:
+        return frozenset(inspect.signature(fn).parameters)
+    except (TypeError, ValueError):
+        return frozenset()
+
+
+def shard_map(f: Optional[Callable] = None, **kwargs):
+    """Version-portable ``shard_map``.
+
+    Accepts either kwarg spelling of the replication check
+    (``check_vma`` — new JAX — or ``check_rep`` — old) and translates to
+    whatever the installed ``shard_map`` understands; unsupported kwargs
+    are dropped rather than raised.  Usable directly or as a decorator
+    factory (``shard_map(mesh=..., ...)(f)``), mirroring upstream.
+    """
+    if f is None:
+        return functools.partial(shard_map, **kwargs)
+    fn, _ = resolve_shard_map()
+    params = _shard_map_params()
+    check = kwargs.pop("check_vma", kwargs.pop("check_rep", None))
+    if check is not None:
+        if "check_vma" in params:
+            kwargs["check_vma"] = check
+        elif "check_rep" in params:
+            kwargs["check_rep"] = check
+    if params:
+        kwargs = {k: v for k, v in kwargs.items() if k in params}
+    return fn(f, **kwargs)
+
+
+# --------------------------------------------------------------------- #
+# Pallas: interpret-mode fallback + compiler-params portability
+# --------------------------------------------------------------------- #
+
+def pallas_interpret_default() -> bool:
+    """True off-TPU: run kernels through the Pallas interpreter so the
+    whole suite executes (and is testable) on any backend; Mosaic-compile
+    natively when real hardware is present."""
+    return not is_tpu()
+
+
+@functools.lru_cache(maxsize=None)
+def _compiler_params_cls() -> Tuple[Optional[type], str]:
+    from jax.experimental.pallas import tpu as pltpu
+
+    for attr in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, attr, None)
+        if cls is not None:
+            return cls, f"pltpu.{attr}"
+    return None, "dict"
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU compiler params via whichever API this JAX exposes.
+
+    ``pltpu.CompilerParams`` (new) -> ``pltpu.TPUCompilerParams`` (older)
+    -> plain ``dict(mosaic=...)`` (oldest).  Kwargs the installed class
+    doesn't know are dropped so callers can always pass the full set.
+    """
+    cls, _ = _compiler_params_cls()
+    if cls is None:
+        return dict(mosaic=dict(kwargs))
+    try:
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kwargs = {k: v for k, v in kwargs.items() if k in fields}
+    except TypeError:
+        pass
+    return cls(**kwargs)
+
+
+def pallas_call(kernel: Callable, *, interpret: Optional[bool] = None,
+                dimension_semantics: Optional[Tuple[str, ...]] = None,
+                compiler_params: Any = None, **kwargs):
+    """``pl.pallas_call`` with capability-aware defaults.
+
+    * ``interpret=None`` resolves via :func:`pallas_interpret_default` —
+      native Mosaic on TPU, interpreter elsewhere.
+    * ``dimension_semantics`` builds ``compiler_params`` through
+      :func:`tpu_compiler_params`, insulating kernels from the
+      CompilerParams/TPUCompilerParams rename.
+    """
+    from jax.experimental import pallas as pl
+
+    if interpret is None:
+        interpret = pallas_interpret_default()
+    if compiler_params is None and dimension_semantics is not None:
+        compiler_params = tpu_compiler_params(
+            dimension_semantics=tuple(dimension_semantics))
+    if compiler_params is not None:
+        kwargs["compiler_params"] = compiler_params
+    return pl.pallas_call(kernel, interpret=interpret, **kwargs)
+
+
+# --------------------------------------------------------------------- #
+# Optional test/tooling deps
+# --------------------------------------------------------------------- #
+
+@functools.lru_cache(maxsize=None)
+def has_hypothesis() -> bool:
+    return importlib.util.find_spec("hypothesis") is not None
+
+
+# --------------------------------------------------------------------- #
+# Capability report
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class CompatReport:
+    jax_version: str
+    platform: str
+    device_count: int
+    pallas_mode: str             # "native-mosaic" | "interpret"
+    compiler_params_api: str
+    shard_map_source: str
+    formats: Dict[str, str]      # name -> "native" | "emulated (...)"
+    hypothesis: bool
+
+    def lines(self) -> List[str]:
+        out = [
+            f"compat,jax={self.jax_version},platform={self.platform},"
+            f"devices={self.device_count}",
+            f"compat,pallas={self.pallas_mode},"
+            f"compiler_params={self.compiler_params_api},"
+            f"shard_map={self.shard_map_source},"
+            f"hypothesis={'yes' if self.hypothesis else 'no'}",
+        ]
+        out += [f"compat,format={name},{how}"
+                for name, how in self.formats.items()]
+        return out
+
+    def __str__(self) -> str:
+        return "\n".join(self.lines())
+
+
+def report() -> CompatReport:
+    """Probe everything once and return the capability report that the
+    benchmark runner and examples print at startup, so every artifact
+    records which paths ran native vs. emulated."""
+    _, cp_api = _compiler_params_cls()
+    _, sm_src = resolve_shard_map()
+    try:
+        n_dev = jax.device_count()
+    except Exception:
+        n_dev = 0
+    return CompatReport(
+        jax_version=jax.__version__,
+        platform=backend_platform(),
+        device_count=n_dev,
+        pallas_mode="interpret" if pallas_interpret_default()
+        else "native-mosaic",
+        compiler_params_api=cp_api,
+        shard_map_source=sm_src,
+        formats={name: spec.describe()
+                 for name, spec in dtype_registry().items()},
+        hypothesis=has_hypothesis(),
+    )

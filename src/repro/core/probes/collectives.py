@@ -45,8 +45,9 @@ class AlphaBeta:
 
 
 def _collective_fn(name: str, mesh: jax.sharding.Mesh) -> Callable:
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     if name == "psum":
         def inner(x):

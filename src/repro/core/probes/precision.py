@@ -23,6 +23,8 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 
+from repro import compat
+
 # The paper's Tab V rows (+ e8m0, which it excludes from mma operands —
 # "only used for scaling exponents", same role here).
 FORMATS: Dict[str, np.dtype] = {
@@ -41,6 +43,15 @@ FORMAT_INFO: Dict[str, Dict[str, float]] = {
     "e3m2": dict(bits=6, max=28.0),
     "e4m3": dict(bits=8, max=448.0),
     "e5m2": dict(bits=8, max=57344.0),
+}
+
+# short Tab V name -> canonical repro.compat registry name
+_COMPAT_NAME = {
+    "e2m1": "float4_e2m1fn",
+    "e2m3": "float6_e2m3fn",
+    "e3m2": "float6_e3m2fn",
+    "e4m3": "float8_e4m3fn",
+    "e5m2": "float8_e5m2",
 }
 
 
@@ -89,7 +100,14 @@ def support_matrix() -> List[FormatSupport]:
         has_dot = " dot(" in hlo or " dot." in hlo or "dot_general" in hlo
         via_convert = "convert" in hlo
         if not hlo:
-            pipeline = "unsupported"
+            # jnp can't hold or lower the dtype — report how the compat
+            # registry stages emulated formats (container + host
+            # rounding), the software analogue of the paper's QMMA
+            # fallback; a registered-but-unlowerable dtype stays
+            # "unsupported".
+            spec = compat.dtype_spec(_COMPAT_NAME[name])
+            pipeline = (f"compat: {spec.describe()}" if spec.emulated
+                        else "unsupported")
         elif via_convert:
             pipeline = "wide-MXU (convert/dequant)"   # QMMA-fallback analogue
         else:

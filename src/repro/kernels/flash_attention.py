@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1.0e30
 
 
@@ -102,7 +104,7 @@ def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          scale: Optional[float] = None,
                          q_offset: int = 0,
                          bq: int = 128, bk: int = 128,
-                         interpret: bool = False) -> jax.Array:
+                         interpret: Optional[bool] = None) -> jax.Array:
     """q (b, hq, sq, d); k, v (b, hkv, skv, d) -> (b, hq, sq, d).
 
     sq must be a multiple of bq; skv is padded to bk internally (the
@@ -130,7 +132,7 @@ def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
         _kernel, bq=bq, bk=bk, skv=skv, causal=causal, window=window,
         softcap=softcap, scale=scale, q_offset=q_offset)
 
-    out = pl.pallas_call(
+    out = compat.pallas_call(
         kernel,
         grid=(b * hq, sq // bq, skv_pad // bk),
         in_specs=[
@@ -145,8 +147,7 @@ def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(qf, kf, vf)
     return out.reshape(b, hq, sq, d)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1.0e30
 
 
@@ -80,7 +82,7 @@ def flash_decode_bhd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      softcap: Optional[float] = None,
                      scale: Optional[float] = None,
                      bk: int = 512,
-                     interpret: bool = False) -> jax.Array:
+                     interpret: Optional[bool] = None) -> jax.Array:
     """q (b, hq, d); k/v cache (b, hkv, S, d); slot_pos (b, S) int32;
     pos (b,) int32 -> (b, hq, d).  S padded to bk (empty slots carry
     slot_pos = -1 and mask out)."""
@@ -105,7 +107,7 @@ def flash_decode_bhd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
     kernel = functools.partial(_kernel, bk=bk, window=window,
                                softcap=softcap, scale=scale)
-    out = pl.pallas_call(
+    out = compat.pallas_call(
         kernel,
         grid=(b * hq, S_pad // bk),
         in_specs=[
@@ -122,8 +124,7 @@ def flash_decode_bhd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             pltpu.VMEM((1, 1), jnp.float32),
             pltpu.VMEM((1, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        dimension_semantics=("parallel", "arbitrary"),
         interpret=interpret,
     )(pos.astype(jnp.int32), qf, kf, vf, slot_pos)
     return out.reshape(b, hq, d)

@@ -1,8 +1,9 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-Each op auto-selects ``interpret=True`` off-TPU (this container's CPU
-validates the kernel bodies; a real v5e compiles them via Mosaic) and
-handles layout/padding so callers use model-native shapes.
+Each op auto-selects ``interpret=True`` off-TPU via ``repro.compat``
+(this container's CPU validates the kernel bodies; a real v5e compiles
+them via Mosaic) and handles layout/padding so callers use model-native
+shapes.
 """
 
 from __future__ import annotations
@@ -13,6 +14,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels import flash_attention as _fa
 from repro.kernels import qmatmul as _qm
 from repro.kernels import ssd_scan as _ssd
@@ -26,7 +28,7 @@ from repro.serve.quant import BLOCK, quantize_blockwise
 
 
 def _interpret() -> bool:
-    return jax.devices()[0].platform != "tpu"
+    return compat.pallas_interpret_default()
 
 
 @functools.partial(jax.jit, static_argnames=(

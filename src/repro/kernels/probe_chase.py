@@ -15,11 +15,14 @@ Validated against a numpy chase in interpret mode.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+
+from repro import compat
 
 
 def _kernel(buf_ref, o_ref, *, steps: int):
@@ -31,10 +34,11 @@ def _kernel(buf_ref, o_ref, *, steps: int):
     o_ref[0, 0] = idx
 
 
-def chase(buf: jax.Array, steps: int, interpret: bool = False) -> jax.Array:
+def chase(buf: jax.Array, steps: int,
+          interpret: Optional[bool] = None) -> jax.Array:
     """buf (rows, 128) int32 — buf[i, 0] = next row.  Returns final index."""
     kernel = functools.partial(_kernel, steps=steps)
-    return pl.pallas_call(
+    return compat.pallas_call(
         kernel,
         in_specs=[pl.BlockSpec(buf.shape, lambda: (0, 0))],
         out_specs=pl.BlockSpec((1, 1), lambda: (0, 0)),

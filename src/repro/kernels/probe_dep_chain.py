@@ -16,11 +16,13 @@ interpret mode the kernel is validated against the closed form
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 TILE = (8, 128)
 
@@ -37,13 +39,13 @@ def _kernel(x_ref, o_ref, *, chain_len: int, ilp: int, a: float, b: float):
 
 def dep_chain(x: jax.Array, chain_len: int, ilp: int = 1,
               a: float = 1.0001, b: float = 0.5,
-              interpret: bool = False) -> jax.Array:
+              interpret: Optional[bool] = None) -> jax.Array:
     """x (ilp, 8, 128) fp32 -> same shape after ``chain_len`` serial FMAs
     per tile (tiles are mutually independent => ILP axis)."""
     assert x.shape == (ilp,) + TILE
     kernel = functools.partial(_kernel, chain_len=chain_len, ilp=ilp,
                                a=a, b=b)
-    return pl.pallas_call(
+    return compat.pallas_call(
         kernel,
         in_specs=[pl.BlockSpec(x.shape, lambda: (0, 0, 0))],
         out_specs=pl.BlockSpec(x.shape, lambda: (0, 0, 0)),

@@ -16,11 +16,14 @@ sweep is benchmarks/fig4_5_matmul.py.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _kernel(x_ref, y_ref, o_ref, acc, *, ilp: int, bm: int):
@@ -44,13 +47,13 @@ def _kernel(x_ref, y_ref, o_ref, acc, *, ilp: int, bm: int):
 
 def mma_probe(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
               bk: int = 128, ilp: int = 1,
-              interpret: bool = False) -> jax.Array:
+              interpret: Optional[bool] = None) -> jax.Array:
     """x (ilp, m, k) @ y (k, n) -> (ilp, m, n), blocked (bm, bn, bk)."""
     ilp_, m, k = x.shape
     n = y.shape[1]
     assert ilp_ == ilp and m % bm == 0 and n % bn == 0 and k % bk == 0
     kernel = functools.partial(_kernel, ilp=ilp, bm=bm)
-    return pl.pallas_call(
+    return compat.pallas_call(
         kernel,
         grid=(m // bm, n // bn, k // bk),
         in_specs=[
@@ -60,7 +63,6 @@ def mma_probe(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
         out_specs=pl.BlockSpec((ilp, bm, bn), lambda i, j, kk: (0, i, j)),
         out_shape=jax.ShapeDtypeStruct((ilp, m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((ilp, bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(x, y)

@@ -17,12 +17,14 @@ innermost/arbitrary with an fp32 VMEM accumulator.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
 from repro.serve.quant import BLOCK
 
 
@@ -51,15 +53,18 @@ def _kernel(x_ref, qw_ref, s_ref, o_ref, acc, *, bk: int):
 def qmatmul_mkn(x: jax.Array, qw: jax.Array, scales: jax.Array, *,
                 bm: int = 128, bn: int = 128, bk: int = 128,
                 out_dtype=jnp.bfloat16,
-                interpret: bool = False) -> jax.Array:
-    """x (m, k) @ dequant(qw (n, k), scales (n, k/32)).T -> (m, n)."""
+                interpret: Optional[bool] = None) -> jax.Array:
+    """x (m, k) @ dequant(qw (n, k), scales (n, k/32)).T -> (m, n).
+
+    ``interpret=None`` auto-selects native Mosaic on TPU vs. the Pallas
+    interpreter elsewhere (``repro.compat``)."""
     m, k = x.shape
     n = qw.shape[0]
     assert qw.shape == (n, k) and scales.shape == (n, k // BLOCK)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k)
     assert bk % BLOCK == 0
     kernel = functools.partial(_kernel, bk=bk)
-    return pl.pallas_call(
+    return compat.pallas_call(
         kernel,
         grid=(m // bm, n // bn, k // bk),
         in_specs=[
@@ -70,7 +75,6 @@ def qmatmul_mkn(x: jax.Array, qw: jax.Array, scales: jax.Array, *,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(x, qw, scales)

@@ -15,11 +15,14 @@ twin ``repro.models.ssm.ssd_chunked`` (the oracle).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_ref, s_scr, *,
@@ -65,7 +68,7 @@ def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_ref, s_scr, *,
 
 def ssd_scan_bhsp(x_disc: jax.Array, dt_a: jax.Array, b: jax.Array,
                   c: jax.Array, chunk: int = 256,
-                  interpret: bool = False):
+                  interpret: Optional[bool] = None):
     """x_disc (bt, h, s, p) = x*dt;  dt_a (bt, h, s);  b, c (bt, s, n).
 
     Returns (y (bt, h, s, p) at x dtype, final_state (bt, h, p, n) fp32).
@@ -76,7 +79,7 @@ def ssd_scan_bhsp(x_disc: jax.Array, dt_a: jax.Array, b: jax.Array,
     n = b.shape[-1]
     assert s % chunk == 0, (s, chunk)
     kernel = functools.partial(_kernel, q=chunk)
-    y, state = pl.pallas_call(
+    y, state = compat.pallas_call(
         kernel,
         grid=(bt, h, s // chunk),
         in_specs=[
@@ -94,8 +97,7 @@ def ssd_scan_bhsp(x_disc: jax.Array, dt_a: jax.Array, b: jax.Array,
             jax.ShapeDtypeStruct((bt, h, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(x_disc, dt_a, b, c)
     return y, state

@@ -13,27 +13,48 @@ integration (weight-only PTQ for the Tab VIII inference sweep).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import functools
+from collections.abc import Mapping
+from typing import Any, Iterator, Tuple
 
 import jax
 import jax.numpy as jnp
-import ml_dtypes
 import numpy as np
 
-# name -> (container dtype, max finite magnitude, host rounding dtype).
-# JAX has native fp8/fp4 dtypes; fp6 has no jnp dtype, but every
-# e2m3/e3m2 value is exactly representable in e4m3 (narrower mantissa AND
-# exponent range), so fp6 rounds via ml_dtypes on the host and rides an
-# e4m3 container — numerically exact fp6, byte-aligned storage (the same
-# byte alignment a real accelerator's fp6 tiles use per the paper's Tab V
-# packing discussion).
-LOW_PRECISION_FORMATS: Dict[str, Tuple[Any, float, Any]] = {
-    "float8_e4m3fn": (jnp.float8_e4m3fn, 448.0, None),
-    "float8_e5m2": (jnp.float8_e5m2, 57344.0, None),
-    "float6_e2m3fn": (jnp.float8_e4m3fn, 7.5, ml_dtypes.float6_e2m3fn),
-    "float6_e3m2fn": (jnp.float8_e4m3fn, 28.0, ml_dtypes.float6_e3m2fn),
-    "float4_e2m1fn": (jnp.float4_e2m1fn, 6.0, None),
-}
+from repro import compat
+
+
+@functools.lru_cache(maxsize=None)
+def _format_table() -> dict:
+    return {name: (spec.container, spec.max_finite, spec.round_dtype)
+            for name, spec in compat.dtype_registry().items()}
+
+
+class _LazyFormats(Mapping):
+    """name -> (container dtype, max finite magnitude, host rounding dtype).
+
+    Built on first access from the ``repro.compat`` dtype registry so
+    importing this module never dereferences a dtype the installed JAX
+    lacks.  Formats without a native jnp dtype (fp6 always; fp4 on older
+    JAX) round via ml_dtypes on the host and ride an e4m3 container —
+    every e2m3/e3m2/e2m1 value is exactly representable in e4m3 (narrower
+    mantissa AND exponent range), so the emulation is numerically exact
+    with byte-aligned storage (the same byte alignment a real
+    accelerator's sub-byte tiles use per the paper's Tab V packing
+    discussion).
+    """
+
+    def __getitem__(self, name: str) -> Tuple[Any, float, Any]:
+        return _format_table()[name]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(_format_table())
+
+    def __len__(self) -> int:
+        return len(_format_table())
+
+
+LOW_PRECISION_FORMATS: Mapping = _LazyFormats()
 
 BLOCK = 32   # elements per scale block (matches mxfp4/mxfp6/mxfp8 spec)
 
@@ -103,8 +124,9 @@ def quantize_params(params: Any, fmt: str, compute_dtype=jnp.bfloat16
         return cast, {"format": fmt, "quantized_bytes": nbytes,
                       "n_quantized": 0, "mse": 0.0}
 
-    bits = {"float8_e4m3fn": 8, "float8_e5m2": 8, "float6_e2m3fn": 8,
-            "float6_e3m2fn": 8, "float4_e2m1fn": 4}[fmt]
+    # storage accounting uses the *container* width on byte-aligned
+    # backends, except fp4 which real deployments bit-pack 2/byte
+    bits = 4 if compat.format_bits(fmt) == 4 else 8
     n_q, q_bytes, mse_num, mse_den = 0, 0, 0.0, 0.0
 
     def visit(path, leaf):

@@ -23,9 +23,9 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.distributed.compression import compressed_psum_tree
 from repro.models.model import Model
 from repro.optim import AdamWConfig, adamw_update

@@ -1,0 +1,212 @@
+"""repro.compat — capability detection, dtype-registry fallbacks,
+shard_map resolution, and the interpret-mode pallas_call path (ISSUE 1
+acceptance: the whole suite must run on a CPU-only host)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+
+
+# --------------------------------------------------------------------- #
+# version / backend probing
+# --------------------------------------------------------------------- #
+
+def test_jax_version_tuple():
+    v = compat.jax_version()
+    assert isinstance(v, tuple) and len(v) >= 2
+    assert all(isinstance(p, int) for p in v)
+    assert v >= (0, 4)
+
+
+def test_backend_platform_known():
+    assert compat.backend_platform() in ("cpu", "gpu", "tpu")
+    assert compat.is_tpu() == (compat.backend_platform() == "tpu")
+
+
+# --------------------------------------------------------------------- #
+# dtype registry
+# --------------------------------------------------------------------- #
+
+def test_registry_covers_all_paper_formats():
+    names = compat.available_formats()
+    assert set(names) == {"float8_e4m3fn", "float8_e5m2", "float6_e2m3fn",
+                          "float6_e3m2fn", "float4_e2m1fn"}
+
+
+def test_registry_containers_are_jax_usable():
+    """Every container must actually hold a JAX array — the whole point
+    of the fallback ladder."""
+    for name in compat.available_formats():
+        spec = compat.dtype_spec(name)
+        arr = jnp.zeros((4,), dtype=spec.container)
+        assert arr.shape == (4,), name
+        assert spec.bits in (4, 6, 8)
+        assert spec.max_finite > 0
+
+
+def test_emulated_specs_always_carry_round_dtype():
+    """Invariant: an emulated container MUST host-round, else 'fp8 on a
+    JAX without fp8' would silently measure the container's precision."""
+    for name in compat.available_formats():
+        spec = compat.dtype_spec(name)
+        if spec.emulated:
+            assert spec.round_dtype is not None, name
+        else:
+            assert spec.round_dtype is None, name
+
+
+def test_fp6_always_emulated_fp8_native_or_emulated():
+    """fp6 has no jnp dtype in any JAX release — must carry a host
+    rounding dtype.  fp8 e4m3/e5m2 have been native for years."""
+    for name in ("float6_e2m3fn", "float6_e3m2fn"):
+        spec = compat.dtype_spec(name)
+        assert spec.emulated and spec.round_dtype is not None, name
+    assert compat.dtype_spec("float8_e4m3fn").native
+
+
+def test_fp4_fallback_selection():
+    """On JAX without jnp.float4_e2m1fn the registry must degrade fp4 to
+    a host-rounded e4m3 container; on newer JAX it must be native.
+    Either way values survive the round trip exactly (every e2m1 value
+    is representable in e4m3)."""
+    spec = compat.dtype_spec("float4_e2m1fn")
+    has_native = getattr(jnp, "float4_e2m1fn", None) is not None
+    if not has_native:
+        assert spec.emulated
+        assert np.dtype(spec.container).itemsize == 1
+        assert spec.round_dtype is not None
+    # fp4's exact value set must survive container storage
+    import ml_dtypes
+    vals = np.asarray([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, -6.0],
+                      np.float32)
+    rounded = vals.astype(ml_dtypes.float4_e2m1fn).astype(np.float32)
+    np.testing.assert_array_equal(rounded, vals)
+    stored = jnp.asarray(rounded).astype(spec.container).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(stored), vals)
+
+
+def test_dtype_spec_unknown_name():
+    with pytest.raises(KeyError):
+        compat.dtype_spec("float3_e1m1")
+
+
+def test_describe_distinguishes_native_and_emulated():
+    descs = {n: compat.dtype_spec(n).describe()
+             for n in compat.available_formats()}
+    assert descs["float8_e4m3fn"] == "native"
+    assert "emulated" in descs["float6_e2m3fn"]
+
+
+# --------------------------------------------------------------------- #
+# shard_map resolution
+# --------------------------------------------------------------------- #
+
+def test_resolve_shard_map_source():
+    fn, src = compat.resolve_shard_map()
+    assert callable(fn)
+    assert src in ("jax.shard_map", "jax.experimental.shard_map")
+
+
+@pytest.mark.parametrize("check_kwarg", [{}, {"check_vma": False},
+                                         {"check_rep": False}])
+def test_shard_map_runs_with_either_check_spelling(check_kwarg):
+    """The wrapper must accept both the new (check_vma) and old
+    (check_rep) kwarg and execute on a world=1 mesh."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("d",))
+    f = compat.shard_map(lambda x: jax.lax.psum(x, "d"), mesh=mesh,
+                         in_specs=P("d"), out_specs=P(), **check_kwarg)
+    out = f(jnp.arange(4, dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.arange(4), atol=0)
+
+
+def test_shard_map_decorator_form():
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("d",))
+
+    @functools.partial(compat.shard_map, mesh=mesh, in_specs=P(),
+                       out_specs=P(), check_vma=False)
+    def double(x):
+        return x * 2.0
+
+    out = double(jnp.ones((4,)))
+    np.testing.assert_allclose(np.asarray(out), 2.0)
+
+
+# --------------------------------------------------------------------- #
+# pallas interpret-mode fallback
+# --------------------------------------------------------------------- #
+
+def test_interpret_default_matches_platform():
+    assert compat.pallas_interpret_default() == (not compat.is_tpu())
+
+
+def test_tpu_compiler_params_buildable():
+    cp = compat.tpu_compiler_params(
+        dimension_semantics=("parallel", "arbitrary"))
+    assert cp is not None
+
+
+def test_pallas_call_interpret_qmatmul_matches_reference(key):
+    """End-to-end acceptance: qmatmul through the compat pallas_call
+    (interpret mode on CPU) matches the bf16 dequant reference."""
+    from repro.kernels.qmatmul import qmatmul_mkn
+    from repro.serve.quant import dequantize_blockwise, quantize_blockwise
+
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (128, 128), jnp.float32).astype(jnp.bfloat16)
+    w = jax.random.normal(k2, (128, 128), jnp.float32)
+    qw, scales = quantize_blockwise(w.T, "float8_e4m3fn")
+
+    got = qmatmul_mkn(x, qw, scales)          # interpret auto-selected
+    w_deq = dequantize_blockwise(qw, scales, jnp.bfloat16)
+    want = (x.astype(jnp.float32) @ w_deq.astype(jnp.float32).T
+            ).astype(jnp.bfloat16)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=0.05, atol=0.05)
+
+
+def test_pallas_call_interpret_qmatmul_fp4_container(key):
+    """fp4 rides the registry's container on this backend and still
+    produces a usable matmul (coarser values, same pipeline)."""
+    from repro.kernels.qmatmul import qmatmul_mkn
+    from repro.serve.quant import dequantize_blockwise, quantize_blockwise
+
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (128, 128), jnp.float32).astype(jnp.bfloat16)
+    w = jax.random.normal(k2, (128, 128), jnp.float32)
+    qw, scales = quantize_blockwise(w.T, "float4_e2m1fn")
+
+    got = qmatmul_mkn(x, qw, scales)
+    w_deq = dequantize_blockwise(qw, scales, jnp.bfloat16)
+    want = (x.astype(jnp.float32) @ w_deq.astype(jnp.float32).T
+            ).astype(jnp.bfloat16)
+    # vs the *dequant* reference the kernel is exact-ish; fp4 coarseness
+    # lives in quantize_blockwise, not the kernel
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=0.05, atol=0.05)
+
+
+# --------------------------------------------------------------------- #
+# capability report
+# --------------------------------------------------------------------- #
+
+def test_report_contents():
+    rep = compat.report()
+    assert rep.jax_version == jax.__version__
+    assert rep.platform == compat.backend_platform()
+    assert rep.pallas_mode in ("native-mosaic", "interpret")
+    assert set(rep.formats) == set(compat.available_formats())
+    text = str(rep)
+    assert "compat,jax=" in text
+    assert "float4_e2m1fn" in text
+    assert len(rep.lines()) == 2 + len(rep.formats)

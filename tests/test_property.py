@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev extra: pip install repro[dev]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models.attention import chunked_attention, full_attention
 from repro.models.ssm import ssd_chunked, ssd_reference
