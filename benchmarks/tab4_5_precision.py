@@ -5,6 +5,7 @@ format actually lowers to — our compiled-HLO inspection is the SASS
 from __future__ import annotations
 
 from benchmarks.common import BenchResult, csv, table
+from repro import compat
 from repro.core.probes import precision
 
 # Paper Tab IV/V ground truth for the two GPUs
@@ -22,19 +23,29 @@ def run(quick: bool = False) -> BenchResult:
     sup = precision.support_matrix()
     rows, csv_rows = [], []
     for s in sup:
+        packed_bpe = compat.storage_bytes_per_element(s.compat_name,
+                                                      packed=True)
+        container_bpe = compat.storage_bytes_per_element(s.compat_name,
+                                                         packed=False)
         rows.append([s.fmt, s.bits, s.max_finite,
                      "yes" if s.representable else "no",
+                     f"{packed_bpe:g} / {container_bpe:g}",
                      s.pipeline, PAPER_PIPELINE.get(s.fmt, "-")])
         csv_rows.append(csv("tab4_5_precision", fmt=s.fmt, bits=s.bits,
                             representable=int(s.representable),
                             native_dot=int(s.native_dot),
-                            via_convert=int(s.lowers_via_convert)))
+                            via_convert=int(s.lowers_via_convert),
+                            packed_bytes_per_elem=packed_bpe,
+                            container_bytes_per_elem=container_bpe))
     md = table(["format", "bits", "max", "representable",
+                "storage B/elem (packed / container)",
                 "this backend lowers via", "paper (SASS)"], rows)
     md += ("\nEvery sub-bf16 format rides the wide pipeline after a "
            "convert — the same fallback the paper catches for FP4 "
            "(QMMA instead of OMMA). e8m0 is used only as the block-scale "
-           "exponent, as in Tab V.\n")
+           "exponent, as in Tab V.  Storage B/elem is the *bit-packed* "
+           "weight layout (repro.lowbits: fp4 2/byte, fp6 4 per 3 bytes "
+           "— Tab V tile packing) vs the byte-aligned compute container.\n")
     # cast-error staircase (Tab V numerics)
     err_rows = []
     for fmt in ("e4m3", "e5m2", "e2m3", "e3m2", "e2m1"):

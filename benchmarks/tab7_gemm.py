@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from benchmarks.common import BenchResult, csv, table
 from repro.core import TPU_V5E, detect_backend_model, time_fn
 from repro.core.energy import matmul_energy
-from repro.kernels import qmatmul, quantize_for_qmatmul
+from repro.kernels import pack_for_qmatmul, qmatmul, quantize_for_qmatmul
 from repro.kernels.ref import qmatmul_ref
 
 PAPER_TFLOPS = {  # Tab VII (effective TFLOP/s, FP8 GEMM)
@@ -72,5 +72,37 @@ def run(quick: bool = False) -> BenchResult:
            "own numbers (0.1-0.9 TFLOP/s) show cuBLASLt FP8 far from "
            "peak on both GPUs; our v5e-modeled numbers are the roofline "
            "bound for the dequant-to-bf16 qmatmul path.\n")
+
+    # Measured weight-storage traffic (Tab V packing): actual nbytes of
+    # the arrays each kernel variant reads from HBM, not nominal widths.
+    k_t, n_t = (512, 512) if quick else (2048, 2048)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k_t, n_t), jnp.float32)
+    bf16_bytes = k_t * n_t * 2
+    traffic_rows = []
+    for fmt, packed in (("float8_e4m3fn", False), ("float6_e2m3fn", True),
+                        ("float6_e3m2fn", True), ("float4_e2m1fn", True)):
+        if packed:
+            qw, sc = pack_for_qmatmul(w, fmt)
+        else:
+            qw, sc = quantize_for_qmatmul(w, fmt)
+        wb = qw.nbytes + sc.nbytes
+        traffic_rows.append([fmt, "packed" if packed else "container",
+                             qw.nbytes / (k_t * n_t), wb,
+                             bf16_bytes / wb])
+        csv_rows.append(csv("tab7_gemm_traffic", fmt=fmt,
+                            layout="packed" if packed else "container",
+                            bytes_per_elem=qw.nbytes / (k_t * n_t),
+                            weight_bytes=wb, scale_bytes=sc.nbytes,
+                            ratio_vs_bf16=bf16_bytes / wb))
+    md += (f"\n**Measured weight HBM traffic ({k_t}x{n_t} weight, "
+           f"scales included)**\n\n"
+           + table(["format", "layout", "B/elem", "bytes",
+                    "traffic drop vs bf16"], traffic_rows))
+    md += ("\nThe fp4 weight array itself is a true 4x below bf16 "
+           "(0.5 B/elem); with the fp32-held e8m0 scales included the "
+           "measured drop is 3.2x (1-byte e8m0 scale storage would give "
+           "~3.8x).  qmatmul_packed reads exactly these bytes per "
+           "k-block and expands nibbles in VMEM, bit-exact with the "
+           "container path.\n")
     return BenchResult("tab7_gemm", "Table VII, Figures 11/12", md,
                        csv_rows)

@@ -36,14 +36,16 @@ from jax.sharding import PartitionSpec
 # Pytree <-> flat dict
 # --------------------------------------------------------------------- #
 
-def _flatten(tree: Any, prefix: str = "") -> dict:
+def _flatten(tree: Any, prefix: str = "", is_leaf=None) -> dict:
     out = {}
-    if isinstance(tree, dict):
+    if is_leaf is not None and is_leaf(tree):
+        out[prefix[:-1]] = tree
+    elif isinstance(tree, dict):
         for k in sorted(tree):
-            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+            out.update(_flatten(tree[k], f"{prefix}{k}/", is_leaf))
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
-            out.update(_flatten(v, f"{prefix}{i}/"))
+            out.update(_flatten(v, f"{prefix}{i}/", is_leaf))
     else:
         out[prefix[:-1]] = tree
     return out
@@ -101,8 +103,13 @@ def save_tree(path: str, tree: Any, step: int,
     manifest = {"step": step, "keys": sorted(arrays),
                 "dtypes": dtypes, "shapes": shapes}
     if specs is not None:
+        # PartitionSpec subclasses tuple: without is_leaf the generic
+        # flatten recursed INTO each spec (an empty P() vanished
+        # entirely), so restores got {} back — treat specs as leaves.
+        flat_specs = _flatten(
+            specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
         manifest["specs"] = {k: _spec_to_json(v)
-                             for k, v in _flatten(specs).items()}
+                             for k, v in flat_specs.items()}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(path):

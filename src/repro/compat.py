@@ -13,8 +13,12 @@ stack the reproduction runs on:
   JAX version.  Every format resolves to a *container* dtype JAX can hold
   plus an optional ``ml_dtypes`` host-rounding dtype, so fp4 degrades to
   fp4-rounded values in an fp8 container instead of an import crash
-  (numerically exact fp4, byte-aligned storage — same story as the fp6
-  containers the seed already used).
+  (numerically exact fp4 in a byte-aligned box).  Sub-byte formats
+  additionally carry a :class:`repro.lowbits.PackedSpec` — true
+  bit-packed storage (fp4 2 values/byte, fp6 4 values in 3 bytes, the
+  paper's Tab V tile packing) that ``serve.quant``/``kernels.qmatmul``
+  use for HBM-resident weights and that storage accounting reports as
+  measured bytes/element.
 * **shard_map resolution** — ``jax.shard_map`` (new) vs
   ``jax.experimental.shard_map.shard_map`` (older), with kwarg
   translation between ``check_vma`` and ``check_rep``.
@@ -41,6 +45,9 @@ import jax
 import ml_dtypes
 import numpy as np
 
+from repro.lowbits import PackedSpec, is_packable
+from repro.lowbits import packed_spec as _lowbits_packed_spec
+
 __all__ = [
     "jax_version",
     "backend_platform",
@@ -50,6 +57,9 @@ __all__ = [
     "dtype_registry",
     "available_formats",
     "format_bits",
+    "PackedSpec",
+    "packed_spec",
+    "storage_bytes_per_element",
     "shard_map",
     "resolve_shard_map",
     "pallas_interpret_default",
@@ -111,16 +121,24 @@ class DTypeSpec:
     container: Any           # jnp-compatible dtype holding the values
     round_dtype: Optional[Any]   # ml_dtypes dtype for host rounding
     native: bool             # container == format in this JAX
+    packed: Optional[PackedSpec] = None   # sub-byte bit-packed layout
 
     @property
     def emulated(self) -> bool:
         return not self.native
 
+    @property
+    def packable(self) -> bool:
+        return self.packed is not None
+
     def describe(self) -> str:
+        suffix = (f"; packed {self.packed.bytes_per_element:g} B/elem"
+                  if self.packed is not None else "")
         if self.native:
-            return "native"
+            return f"native{suffix}"
         return (f"emulated ({np.dtype(self.container).name} container, "
-                f"{'host-rounded' if self.round_dtype is not None else 'exact'})")
+                f"{'host-rounded' if self.round_dtype is not None else 'exact'}"
+                f"{suffix})")
 
 
 def _jnp_dtype(name: str):
@@ -161,15 +179,16 @@ def dtype_registry() -> Dict[str, DTypeSpec]:
     ]
     reg: Dict[str, DTypeSpec] = {}
     for name, bits, fmax, round_dt in table:
+        packed = _lowbits_packed_spec(name) if is_packable(name) else None
         native = _jnp_dtype(name)
         if native is not None:
             reg[name] = DTypeSpec(name=name, bits=bits, max_finite=fmax,
                                   container=native, round_dtype=None,
-                                  native=True)
+                                  native=True, packed=packed)
         else:
             reg[name] = DTypeSpec(name=name, bits=bits, max_finite=fmax,
                                   container=e4m3, round_dtype=round_dt,
-                                  native=False)
+                                  native=False, packed=packed)
     return reg
 
 
@@ -188,6 +207,19 @@ def available_formats() -> Tuple[str, ...]:
 
 def format_bits(name: str) -> int:
     return dtype_spec(name).bits
+
+
+def packed_spec(name: str) -> Optional[PackedSpec]:
+    """The sub-byte packed layout for ``name``, or None (byte formats)."""
+    return dtype_spec(name).packed
+
+
+def storage_bytes_per_element(name: str, packed: bool = True) -> float:
+    """True storage B/elem: packed layout when available, else container."""
+    spec = dtype_spec(name)
+    if packed and spec.packed is not None:
+        return spec.packed.bytes_per_element
+    return float(np.dtype(spec.container).itemsize)
 
 
 # --------------------------------------------------------------------- #

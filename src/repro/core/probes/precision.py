@@ -66,6 +66,7 @@ class FormatSupport:
     native_dot: bool              # dot without explicit convert in HLO
     lowers_via_convert: bool      # the "QMMA fallback" analogue
     pipeline: str                 # e.g. "bf16-MXU (dequant)", "native"
+    compat_name: str = ""         # canonical repro.compat registry name
 
 
 def _dot_hlo(fmt_dtype: np.dtype) -> str:
@@ -120,6 +121,7 @@ def support_matrix() -> List[FormatSupport]:
             native_dot=has_dot and not via_convert,
             lowers_via_convert=via_convert,
             pipeline=pipeline,
+            compat_name=_COMPAT_NAME[name],
         ))
     return out
 

@@ -45,12 +45,19 @@ def axis_size(mesh: Mesh, axes) -> int:
 
 
 def _maybe(mesh: Mesh, dim: int, axes) -> Optional[Any]:
-    """axes if dim divides evenly over them, else None (replicate)."""
+    """axes if dim divides evenly over them, else None (replicate).
+
+    Normalized: a single axis comes back as its bare name (``"data"``,
+    never the 1-tuple ``("data",)``) so spec entries compare uniformly;
+    only genuinely multi-axis placements stay tuples."""
     if axes is None or dim <= 0:
         return None
     size = axis_size(mesh, axes)
     if size > 1 and dim % size == 0:
-        return axes if isinstance(axes, str) else tuple(axes)
+        if isinstance(axes, str):
+            return axes
+        axes = tuple(axes)
+        return axes[0] if len(axes) == 1 else axes
     return None
 
 

@@ -13,7 +13,9 @@ from repro.kernels.ops import (  # noqa: F401
     flash_decode,
     make_chase_buffer,
     mma_probe,
+    pack_for_qmatmul,
     qmatmul,
+    qmatmul_packed,
     quantize_for_qmatmul,
     ssd_scan,
 )

@@ -13,8 +13,9 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro import compat
+from repro import compat, lowbits
 from repro.kernels import flash_attention as _fa
 from repro.kernels import qmatmul as _qm
 from repro.kernels import ssd_scan as _ssd
@@ -106,7 +107,39 @@ def qmatmul(x: jax.Array, qw: jax.Array, scales: jax.Array, *,
     return out[:m] if pad_m else out
 
 
+@functools.partial(jax.jit, static_argnames=("fmt", "bm", "bn", "bk"))
+def qmatmul_packed(x: jax.Array, pw: jax.Array, scales: jax.Array,
+                   fmt: str, *,
+                   bm: int = 128, bn: int = 128, bk: int = 128
+                   ) -> jax.Array:
+    """x (m, k) @ dequant(unpack(pw), scales).T with bit-packed weights.
+
+    ``pw`` is (n, k*bits/8) uint8 from :func:`pack_for_qmatmul` — true
+    0.5 B/elem (fp4) / 0.75 B/elem (fp6) HBM-resident storage, expanded
+    in VMEM; bit-exact with :func:`qmatmul` on the same quantized
+    values."""
+    m, _ = x.shape
+    pad_m = (-m) % bm
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    out = _qm.qmatmul_packed_mkn(x, pw, scales, fmt, bm=bm, bn=bn, bk=bk,
+                                 interpret=_interpret())
+    return out[:m] if pad_m else out
+
+
 def quantize_for_qmatmul(w: jax.Array, fmt: str
                          ) -> Tuple[jax.Array, jax.Array]:
     """w (k, n) -> (qw (n, k) quantized along k, scales (n, k/32))."""
     return quantize_blockwise(w.T, fmt)
+
+
+def pack_for_qmatmul(w: jax.Array, fmt: str
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """w (k, n) -> (pw (n, k*bits/8) uint8 bit-packed, scales (n, k/32)).
+
+    Same quantization as :func:`quantize_for_qmatmul` (so the packed and
+    container kernels see identical values), then ``repro.lowbits.pack``
+    along k.  ``fmt`` must be packable (fp4/fp6)."""
+    qw, scales = quantize_blockwise(w.T, fmt)
+    pw = lowbits.pack(np.asarray(qw.astype(jnp.float32)), fmt)
+    return jnp.asarray(pw), scales

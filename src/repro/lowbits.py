@@ -1,0 +1,229 @@
+"""Bit-packed sub-byte storage for the emulated mma formats (Tab V).
+
+The paper's sub-byte datatypes (e2m1 FP4, e2m3/e3m2 FP6) exist *for*
+storage density: Tab V's packing discussion is explicit that fp4 tiles
+pack 2 values/byte and fp6 tiles 4 values in 3 bytes.  The PR-1 compat
+registry emulated these formats numerically (exact values in a 1-byte
+e4m3 container) but stored them at container width — so the "~4x HBM
+traffic drop" the qmatmul docstring promised was nominal, not measured.
+
+This module is the packing layer behind ``repro.compat``'s dtype
+registry:
+
+* :class:`PackedSpec` — per-format bit layout (field widths, exponent
+  bias, group geometry: how many values share how many bytes),
+* :func:`encode` / :func:`decode` — value <-> bit-code conversion.
+  Encoding rides ``ml_dtypes`` (its byte encoding IS the format's bit
+  pattern, zero-extended into a uint8 — verified by the all-codes test);
+  decoding is plain shift/mask/exp2 arithmetic so the *same* function
+  body runs on numpy arrays on the host and on jnp tiles inside a
+  Pallas kernel (``repro.kernels.qmatmul.qmatmul_packed_mkn`` expands
+  nibble-packed k-blocks in VMEM with it),
+* :func:`pack` / :func:`unpack` — vectorized (de)packing along the last
+  axis, tail-padded with zero codes so odd lengths round-trip,
+* :func:`packed_nbytes` — true storage accounting (0.5 B/elem fp4,
+  0.75 B/elem fp6) used by the quantizer stats and benchmark artifacts.
+
+Bit order is little-endian within a group: value ``i`` of an fp4 pair
+occupies bits ``[4i, 4i+4)`` of the byte; an fp6 quad occupies the 24
+bits of its 3 bytes in the same ascending order.
+
+No ``repro`` imports here — this is a leaf module ``repro.compat``
+builds its registry on top of.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import ml_dtypes
+import numpy as np
+
+__all__ = [
+    "PackedSpec",
+    "PACKED_FORMATS",
+    "packed_spec",
+    "is_packable",
+    "encode",
+    "decode",
+    "pack",
+    "unpack",
+    "packed_nbytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedSpec:
+    """Bit layout + group geometry of one sub-byte format.
+
+    ``values_per_group`` values are stored in ``bytes_per_group`` bytes:
+    fp4 packs 2/1 (nibbles), fp6 packs 4/3 (24 bits) — the Tab V tile
+    packing.  ``code_dtype`` is the ``ml_dtypes`` scalar whose uint8
+    encoding equals the format's bit code (used for host-side encode,
+    i.e. rounding float -> code).
+    """
+
+    name: str                # canonical registry name, e.g. "float4_e2m1fn"
+    bits: int                # code width
+    ebits: int               # exponent field width
+    mbits: int               # mantissa field width
+    bias: int                # exponent bias
+    values_per_group: int    # values per packed group
+    bytes_per_group: int     # bytes per packed group
+    code_dtype: Any          # ml_dtypes dtype for host-side encoding
+
+    @property
+    def bytes_per_element(self) -> float:
+        return self.bytes_per_group / self.values_per_group
+
+    def packed_len(self, n: int) -> int:
+        """Packed byte count for ``n`` values (tail group zero-padded)."""
+        g = self.values_per_group
+        return (n + g - 1) // g * self.bytes_per_group
+
+
+PACKED_FORMATS: Dict[str, PackedSpec] = {
+    "float4_e2m1fn": PackedSpec("float4_e2m1fn", 4, ebits=2, mbits=1,
+                                bias=1, values_per_group=2,
+                                bytes_per_group=1,
+                                code_dtype=ml_dtypes.float4_e2m1fn),
+    "float6_e2m3fn": PackedSpec("float6_e2m3fn", 6, ebits=2, mbits=3,
+                                bias=1, values_per_group=4,
+                                bytes_per_group=3,
+                                code_dtype=ml_dtypes.float6_e2m3fn),
+    "float6_e3m2fn": PackedSpec("float6_e3m2fn", 6, ebits=3, mbits=2,
+                                bias=3, values_per_group=4,
+                                bytes_per_group=3,
+                                code_dtype=ml_dtypes.float6_e3m2fn),
+}
+
+
+def packed_spec(name: str) -> PackedSpec:
+    try:
+        return PACKED_FORMATS[name]
+    except KeyError:
+        raise KeyError(f"format {name!r} has no packed storage layout; "
+                       f"packable: {sorted(PACKED_FORMATS)}") from None
+
+
+def is_packable(name: str) -> bool:
+    return name in PACKED_FORMATS
+
+
+def packed_nbytes(n: int, fmt: str) -> int:
+    """True storage bytes for ``n`` values of ``fmt`` (no scales)."""
+    return packed_spec(fmt).packed_len(n)
+
+
+# --------------------------------------------------------------------- #
+# value <-> code
+# --------------------------------------------------------------------- #
+
+def encode(values, fmt: str) -> np.ndarray:
+    """Round float values to ``fmt`` and return uint8 bit codes (host).
+
+    ``ml_dtypes`` encodes each sub-byte format's bit pattern in the low
+    bits of one byte, so ``astype(code_dtype).view(uint8)`` is exactly
+    "round, then read the code".
+    """
+    spec = packed_spec(fmt)
+    a = np.asarray(values, dtype=np.float32)
+    return a.astype(spec.code_dtype).view(np.uint8)
+
+
+def decode(codes, fmt: str):
+    """Bit codes -> float32 values, via shift/mask/exp2 arithmetic only.
+
+    Works on numpy *and* jnp/traced arrays (no ml_dtypes, no table
+    lookup), so Pallas kernels call this directly on VMEM tiles.
+    """
+    spec = packed_spec(fmt)
+    c = codes.astype(np.int32) if isinstance(codes, np.ndarray) \
+        else codes.astype("int32")
+    m = c & ((1 << spec.mbits) - 1)
+    e = (c >> spec.mbits) & ((1 << spec.ebits) - 1)
+    s = c >> (spec.mbits + spec.ebits)
+    frac = m.astype(np.float32) * np.float32(2.0 ** -spec.mbits)
+    is_sub = (e == 0)
+    # subnormal: frac * 2^(1-bias); normal: (1+frac) * 2^(e-bias)
+    mag = _where(is_sub,
+                 frac * np.float32(2.0 ** (1 - spec.bias)),
+                 (np.float32(1.0) + frac)
+                 * _exp2(e.astype(np.float32) - np.float32(spec.bias)))
+    return _where(s != 0, -mag, mag)
+
+
+def _where(cond, a, b):
+    if isinstance(cond, np.ndarray):
+        return np.where(cond, a, b)
+    import jax.numpy as jnp
+    return jnp.where(cond, a, b)
+
+
+def _exp2(x):
+    if isinstance(x, np.ndarray):
+        return np.exp2(x)
+    import jax.numpy as jnp
+    return jnp.exp2(x)
+
+
+# --------------------------------------------------------------------- #
+# pack / unpack along the last axis
+# --------------------------------------------------------------------- #
+
+def pack(values, fmt: str) -> np.ndarray:
+    """(..., n) float values -> (..., packed_len(n)) uint8, host-side.
+
+    Values are rounded to ``fmt`` first (exact when they already are
+    ``fmt`` values, e.g. out of ``quantize_blockwise``); a tail shorter
+    than the group is zero-code padded.
+    """
+    spec = packed_spec(fmt)
+    codes = encode(values, fmt)
+    *lead, n = codes.shape
+    g = spec.values_per_group
+    pad = (-n) % g
+    if pad:
+        codes = np.concatenate(
+            [codes, np.zeros((*lead, pad), np.uint8)], axis=-1)
+    grp = codes.reshape(*lead, -1, g).astype(np.uint32)
+    if fmt == "float4_e2m1fn":
+        by = (grp[..., 0] | (grp[..., 1] << 4))[..., None]
+    else:                         # fp6: 4 codes -> 24 bits -> 3 bytes
+        word = (grp[..., 0] | (grp[..., 1] << 6)
+                | (grp[..., 2] << 12) | (grp[..., 3] << 18))
+        by = np.stack([word & 0xFF, (word >> 8) & 0xFF, word >> 16],
+                      axis=-1)
+    return by.reshape(*lead, -1).astype(np.uint8)
+
+
+def unpack_codes(packed, fmt: str):
+    """(..., nbytes) uint8 -> (..., values) int32 codes (padding incl.).
+
+    Pure shift/mask/reshape — runs on numpy or jnp arrays, including
+    inside Pallas kernels (the VMEM expand step of ``qmatmul_packed``).
+    """
+    spec = packed_spec(fmt)
+    is_np = isinstance(packed, np.ndarray)
+    b = packed.astype(np.int32) if is_np else packed.astype("int32")
+    *lead, nb = b.shape
+    if is_np:
+        import numpy as xp
+    else:
+        import jax.numpy as xp
+    if fmt == "float4_e2m1fn":
+        grp = xp.stack([b & 0xF, b >> 4], axis=-1)
+    else:
+        tri = b.reshape(*lead, nb // spec.bytes_per_group, 3)
+        word = tri[..., 0] | (tri[..., 1] << 8) | (tri[..., 2] << 16)
+        grp = xp.stack([word & 0x3F, (word >> 6) & 0x3F,
+                        (word >> 12) & 0x3F, (word >> 18) & 0x3F],
+                       axis=-1)
+    return grp.reshape(*lead, -1)
+
+
+def unpack(packed, fmt: str, n: int):
+    """(..., nbytes) uint8 -> (..., n) float32 (tail padding sliced off)."""
+    vals = decode(unpack_codes(packed, fmt), fmt)
+    return vals[..., :n]

@@ -4,7 +4,9 @@ from repro.serve.sampler import sample_token  # noqa: F401
 from repro.serve.quant import (  # noqa: F401
     LOW_PRECISION_FORMATS,
     dequantize_blockwise,
+    dequantize_tree,
     quantize_blockwise,
     quantize_params,
+    quantize_tree,
 )
 from repro.serve.engine import ServeEngine, GenerationResult  # noqa: F401

@@ -1,0 +1,204 @@
+"""Bit-packed sub-byte storage (repro.lowbits + the packed qmatmul path).
+
+The e4m3-container emulation is the numerical oracle: every packed
+format must round-trip to exactly the values the container path stores,
+and qmatmul_packed must be bit-exact with qmatmul in interpret mode.
+"""
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+import repro.kernels as K
+from repro import compat, lowbits
+from repro.serve.quant import (BLOCK, dequantize_tree, quantize_blockwise,
+                               quantize_params, quantize_tree)
+
+PACKED = sorted(lowbits.PACKED_FORMATS)
+
+
+# ------------------------------------------------------------------ #
+# codes <-> values
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("fmt", PACKED)
+def test_decode_matches_ml_dtypes_all_codes(fmt):
+    """The arithmetic decoder reproduces ml_dtypes bit-for-bit over the
+    format's entire code space (so in-kernel decode == host decode)."""
+    spec = lowbits.packed_spec(fmt)
+    codes = np.arange(1 << spec.bits, dtype=np.uint8)
+    want = codes.view(spec.code_dtype).astype(np.float32)
+    np.testing.assert_array_equal(lowbits.decode(codes, fmt), want)
+    # and on the jnp side (the path Pallas kernels trace)
+    got_jnp = np.asarray(lowbits.decode(jnp.asarray(codes), fmt))
+    np.testing.assert_array_equal(got_jnp, want)
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+def test_encode_decode_roundtrip(fmt):
+    spec = lowbits.packed_spec(fmt)
+    x = np.random.RandomState(0).randn(256).astype(np.float32)
+    rounded = x.astype(spec.code_dtype).astype(np.float32)
+    np.testing.assert_array_equal(
+        lowbits.decode(lowbits.encode(x, fmt), fmt), rounded)
+
+
+# ------------------------------------------------------------------ #
+# pack / unpack
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("fmt", PACKED)
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 7, 32, 64, 65, 127])
+def test_pack_unpack_odd_tails(fmt, n):
+    """Round trip at every tail length, packed size from the spec."""
+    spec = lowbits.packed_spec(fmt)
+    x = np.random.RandomState(n).randn(3, n).astype(np.float32)
+    rounded = x.astype(spec.code_dtype).astype(np.float32)
+    p = lowbits.pack(x, fmt)
+    assert p.dtype == np.uint8
+    assert p.shape == (3, spec.packed_len(n))
+    assert p.shape[-1] == lowbits.packed_nbytes(n, fmt)
+    np.testing.assert_array_equal(lowbits.unpack(p, fmt, n), rounded)
+
+
+@pytest.mark.parametrize("fmt", PACKED)
+def test_pack_matches_container_path(fmt):
+    """Packed storage holds exactly the values the e4m3 container path
+    (quantize_blockwise) stores — the emulation oracle."""
+    w = np.random.RandomState(1).randn(16, 2 * BLOCK).astype(np.float32)
+    q, scales = quantize_blockwise(jnp.asarray(w), fmt)
+    container_vals = np.asarray(q.astype(jnp.float32))
+    p = lowbits.pack(container_vals, fmt)
+    np.testing.assert_array_equal(
+        lowbits.unpack(p, fmt, container_vals.shape[-1]), container_vals)
+
+
+def test_storage_accounting():
+    assert lowbits.packed_nbytes(128, "float4_e2m1fn") == 64      # 0.5 B
+    assert lowbits.packed_nbytes(128, "float6_e2m3fn") == 96      # 0.75 B
+    assert lowbits.packed_nbytes(7, "float4_e2m1fn") == 4         # tail
+    assert lowbits.packed_nbytes(5, "float6_e3m2fn") == 6         # tail
+    assert compat.storage_bytes_per_element("float4_e2m1fn") == 0.5
+    assert compat.storage_bytes_per_element("float6_e3m2fn") == 0.75
+    assert compat.storage_bytes_per_element("float8_e4m3fn") == 1.0
+    assert compat.storage_bytes_per_element(
+        "float4_e2m1fn", packed=False) == 1.0
+
+
+def test_registry_carries_packed_specs():
+    for name, spec in compat.dtype_registry().items():
+        if spec.bits < 8:
+            assert spec.packed is not None and spec.packable
+            assert spec.packed.packed_len(64) == 64 * spec.bits // 8
+            assert "packed" in spec.describe()
+        else:
+            assert spec.packed is None and not spec.packable
+
+
+# ------------------------------------------------------------------ #
+# qmatmul_packed vs qmatmul (interpret mode)
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("fmt", PACKED)
+def test_qmatmul_packed_bit_exact(key, fmt):
+    w = jax.random.normal(key, (256, 128), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (64, 256),
+                          jnp.bfloat16)
+    qw, sc = K.quantize_for_qmatmul(w, fmt)
+    pw, sc2 = K.pack_for_qmatmul(w, fmt)
+    np.testing.assert_array_equal(np.asarray(sc), np.asarray(sc2))
+    spec = lowbits.packed_spec(fmt)
+    assert pw.shape == (128, spec.packed_len(256))
+    got = K.qmatmul_packed(x, pw, sc2, fmt)
+    want = K.qmatmul(x, qw, sc)
+    np.testing.assert_array_equal(
+        np.asarray(got).view(np.uint16), np.asarray(want).view(np.uint16))
+
+
+def test_qmatmul_packed_block_shapes_and_padding(key):
+    """m-padding path + non-default blocks, fp4."""
+    fmt = "float4_e2m1fn"
+    w = jax.random.normal(key, (512, 256), jnp.float32)
+    x = jax.random.normal(key, (100, 512), jnp.bfloat16)
+    qw, sc = K.quantize_for_qmatmul(w, fmt)
+    pw, _ = K.pack_for_qmatmul(w, fmt)
+    for bm, bn, bk in [(128, 128, 128), (64, 256, 256), (128, 64, 512)]:
+        got = K.qmatmul_packed(x, pw, sc, fmt, bm=bm, bn=bn, bk=bk)
+        want = K.qmatmul(x, qw, sc, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_array_equal(
+            np.asarray(got).view(np.uint16),
+            np.asarray(want).view(np.uint16))
+
+
+# ------------------------------------------------------------------ #
+# quantize_tree / engine storage
+# ------------------------------------------------------------------ #
+
+def _toy_params(key):
+    ks = jax.random.split(key, 3)
+    return {"blk": {"w1": jax.random.normal(ks[0], (64, 2 * BLOCK)),
+                    "ln_1": jax.random.normal(ks[1], (64,))},
+            "embed": jax.random.normal(ks[2], (32, 2 * BLOCK))}
+
+
+@pytest.mark.parametrize("fmt,bpe", [("float4_e2m1fn", 0.5),
+                                     ("float6_e2m3fn", 0.75),
+                                     ("float6_e3m2fn", 0.75),
+                                     ("float8_e4m3fn", 1.0)])
+def test_quantize_tree_storage_and_roundtrip(key, fmt, bpe):
+    params = _toy_params(key)
+    store, stats = quantize_tree(params, fmt, packed=True)
+    assert stats["n_quantized"] == 2
+    assert stats["bytes_per_element"] == bpe
+    n_elems = params["blk"]["w1"].size + params["embed"].size
+    assert stats["weight_bytes"] == int(n_elems * bpe)
+    # dequantized store == the fake-quant oracle, exactly
+    deq = dequantize_tree(store)
+    fake, _ = quantize_params(params, fmt)
+    np.testing.assert_array_equal(
+        np.asarray(deq["blk"]["w1"], np.float32),
+        np.asarray(fake["blk"]["w1"], np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(deq["embed"], np.float32),
+        np.asarray(fake["embed"], np.float32))
+    # non-quantizable leaves pass through untouched
+    np.testing.assert_array_equal(np.asarray(deq["blk"]["ln_1"]),
+                                  np.asarray(params["blk"]["ln_1"]))
+
+
+def test_quantize_tree_unpacked_container(key):
+    params = _toy_params(key)
+    store, stats = quantize_tree(params, "float4_e2m1fn", packed=False)
+    assert not stats["packed"]
+    assert stats["bytes_per_element"] == 1.0        # container width
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_tree(store)["embed"], np.float32),
+        np.asarray(dequantize_tree(
+            quantize_tree(params, "float4_e2m1fn", packed=True)[0]
+        )["embed"], np.float32))
+
+
+def test_engine_packed_weight_store(key):
+    """Engine with weight_format holds a 0.5 B/elem fp4 store and decodes
+    identically to pre-dequantized params (greedy sampling)."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve import ServeEngine
+
+    cfg = get_config("gptneox-1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch=2, max_seq=32,
+                      weight_format="float4_e2m1fn", packed=True)
+    assert eng.weight_stats["packed"]
+    assert eng.weight_stats["bytes_per_element"] == 0.5
+    # oracle: fake-quant params through quantize_params
+    fake, _ = quantize_params(params, "float4_e2m1fn")
+    ref = ServeEngine(model, fake, batch=2, max_seq=32)
+    for e in (eng, ref):
+        e.submit([1, 2, 3, 4], max_new_tokens=4)
+    got = eng.run()
+    want = ref.run()
+    assert [r.tokens for r in got] == [r.tokens for r in want]
