@@ -78,6 +78,13 @@ class ArchConfig:
     compute_dtype: str = "float32"
     cache_dtype: str = ""         # KV-cache storage ("" = compute_dtype);
                                   # fp8 halves decode weight/KV traffic
+    kv_format: str = ""           # blockwise-QUANTIZED KV storage: a
+                                  # repro.compat registry format (e.g.
+                                  # "float8_e4m3fn", "float4_e2m1fn");
+                                  # K/V held as packed codes + 1-byte
+                                  # e8m0 block scales, (de)quantized in
+                                  # the cache write/read paths.  "" =
+                                  # plain cast storage per cache_dtype.
     attn_chunk: int = 1024        # online-softmax KV block (XLA path)
     attn_repeat_kv: bool = False  # materialize KV at full q-head count:
                                   # the (hq)->(hkv, g) grouping reshape is

@@ -11,6 +11,7 @@ from repro.kernels.ops import (  # noqa: F401
     dep_chain,
     flash_attention,
     flash_decode,
+    flash_decode_quant,
     make_chase_buffer,
     mma_probe,
     pack_for_qmatmul,

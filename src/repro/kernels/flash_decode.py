@@ -5,8 +5,13 @@ The serving hot path (decode_32k / long_500k cells): one query row
 attends to S cached positions.  The XLA path materializes the (1, S)
 score row per head in HBM; this kernel streams KV blocks through VMEM
 with the m/l/acc partial-softmax state in scratch — HBM traffic is the
-KV read itself (the roofline floor), which is why the fp8-KV lever
-(§Perf iter 3) composes: the dequant happens in VMEM on the way in.
+KV read itself (the roofline floor), which is why the quantized-KV
+lever composes: :func:`flash_decode_quant_bhd` streams fp8-container or
+nibble-packed fp4 KV blocks plus their 1-byte e8m0 scales and expands
+them in VMEM on the way in (``repro.lowbits`` shift/mask/exp2 — the
+same codec the cache write path encodes with), so the HBM read per
+cached token is the true packed byte count (fp4 ≈ 0.53 B/elem vs 2
+B/elem bf16 — the §VI.D read-bandwidth story).
 
 Grid (batch*q_heads, S/bk), KV-block dim innermost/arbitrary.  Ring-cache
 semantics match ``repro.models.attention.decode_attention`` (the oracle):
@@ -25,15 +30,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro import compat
+from repro import compat, lowbits
 
 NEG_INF = -1.0e30
 
 
-def _kernel(pos_ref, q_ref, k_ref, v_ref, sp_ref, o_ref,
-            m_scr, l_scr, acc_scr, *,
-            bk: int, window: Optional[int], softcap: Optional[float],
-            scale: float):
+def _attend_block(q, k, v, slot_pos, pos, o_ref, m_scr, l_scr, acc_scr, *,
+                  window: Optional[int], softcap: Optional[float],
+                  scale: float):
+    """Shared online-softmax body: one (1, d) query against one (bk, d)
+    KV block, scratch-carried m/l/acc, finalize on the last block."""
     j = pl.program_id(1)
     nj = pl.num_programs(1)
 
@@ -42,12 +48,6 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, sp_ref, o_ref,
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
-
-    q = q_ref[0].astype(jnp.float32)                  # (1, d)
-    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
-    v = v_ref[0].astype(jnp.float32)                  # (bk, d)
-    slot_pos = sp_ref[0]                              # (bk,) int32
-    pos = pos_ref[0]                                  # () int32
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -76,6 +76,47 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, sp_ref, o_ref,
         o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _kernel(pos_ref, q_ref, k_ref, v_ref, sp_ref, o_ref,
+            m_scr, l_scr, acc_scr, *,
+            bk: int, window: Optional[int], softcap: Optional[float],
+            scale: float):
+    q = q_ref[0].astype(jnp.float32)                  # (1, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+    _attend_block(q, k, v, sp_ref[0], pos_ref[0], o_ref,
+                  m_scr, l_scr, acc_scr,
+                  window=window, softcap=softcap, scale=scale)
+
+
+def _expand_kv_tile(stored, s_codes, *, fmt: str, packed: bool, d: int,
+                    blk: int):
+    """(bk, stored_d) codes/container + (bk, d/blk) e8m0 bytes ->
+    (bk, d) fp32, in VMEM — dequant-on-the-way-in (shift/mask/exp2 only,
+    no ml_dtypes: the ``repro.lowbits`` in-kernel codec)."""
+    if packed:
+        vals = lowbits.decode(lowbits.unpack_codes(stored, fmt), fmt)
+    else:
+        vals = stored.astype(jnp.float32)
+    scales = lowbits.e8m0_decode(s_codes)             # (bk, d/blk)
+    bkk = vals.shape[0]
+    return (vals.reshape(bkk, d // blk, blk)
+            * scales[:, :, None]).reshape(bkk, d)
+
+
+def _quant_kernel(pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, sp_ref,
+                  o_ref, m_scr, l_scr, acc_scr, *,
+                  bk: int, window: Optional[int], softcap: Optional[float],
+                  scale: float, fmt: str, packed: bool, d: int, blk: int):
+    q = q_ref[0].astype(jnp.float32)                  # (1, d)
+    k = _expand_kv_tile(kq_ref[0], ks_ref[0], fmt=fmt, packed=packed,
+                        d=d, blk=blk)                 # (bk, d)
+    v = _expand_kv_tile(vq_ref[0], vs_ref[0], fmt=fmt, packed=packed,
+                        d=d, blk=blk)                 # (bk, d)
+    _attend_block(q, k, v, sp_ref[0], pos_ref[0], o_ref,
+                  m_scr, l_scr, acc_scr,
+                  window=window, softcap=softcap, scale=scale)
+
+
 def flash_decode_bhd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      slot_pos: jax.Array, pos: jax.Array, *,
                      window: Optional[int] = None,
@@ -91,8 +132,7 @@ def flash_decode_bhd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     ratio = hq // hkv
     pad = (-S) % bk
     if pad:
-        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_cache, v_cache = _pad_s(k_cache, pad), _pad_s(v_cache, pad)
         slot_pos = jnp.pad(slot_pos, ((0, 0), (0, pad)),
                            constant_values=-1)
     S_pad = S + pad
@@ -127,4 +167,94 @@ def flash_decode_bhd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         dimension_semantics=("parallel", "arbitrary"),
         interpret=interpret,
     )(pos.astype(jnp.int32), qf, kf, vf, slot_pos)
+    return out.reshape(b, hq, d)
+
+
+def _pad_s(x: jax.Array, pad: int, fill=0) -> jax.Array:
+    """Pad axis 2 (the S axis of (b, h, S, ...) arrays) by ``pad``."""
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[2] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def flash_decode_quant_bhd(q: jax.Array,
+                           k_q: jax.Array, k_s: jax.Array,
+                           v_q: jax.Array, v_s: jax.Array,
+                           slot_pos: jax.Array, pos: jax.Array, *,
+                           fmt: str,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           bk: int = 512,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Quantized-KV flash decode: the dequant-in-VMEM leg.
+
+    q (b, hq, d); k_q/v_q (b, hkv, S, stored_d) — nibble/3-byte-group
+    packed uint8 codes for sub-byte ``fmt``, container bytes for fp8;
+    k_s/v_s (b, hkv, S, d/blk) uint8 e8m0 block-scale codes (the layout
+    ``repro.models.attention.init_kv_cache(kv_format=...)`` holds, head/
+    seq axes swapped); slot_pos (b, S) int32; pos (b,) int32 ->
+    (b, hq, d).  HBM reads per cached token are the true packed bytes +
+    1-byte scales; expansion happens on the VMEM tile on the way into
+    the dot (``lowbits.decode``/``e8m0_decode``).
+    """
+    spec = compat.dtype_spec(fmt)
+    b, hq, d = q.shape
+    hkv, S, stored_d = k_q.shape[1], k_q.shape[2], k_q.shape[3]
+    n_blk = k_s.shape[3]
+    packed = spec.packed is not None
+    if packed:
+        ps = spec.packed
+        assert stored_d == d // ps.values_per_group * ps.bytes_per_group, \
+            (stored_d, d, fmt)
+    else:
+        assert stored_d == d, (stored_d, d, fmt)
+    assert d % n_blk == 0, (d, n_blk)
+    blk = d // n_blk
+    ratio = hq // hkv
+    pad = (-S) % bk
+    if pad:
+        k_q, v_q = _pad_s(k_q, pad), _pad_s(v_q, pad)
+        k_s, v_s = _pad_s(k_s, pad), _pad_s(v_s, pad)
+        slot_pos = jnp.pad(slot_pos, ((0, 0), (0, pad)),
+                           constant_values=-1)
+    S_pad = S + pad
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    qf = q.reshape(b * hq, 1, d)
+    kqf = k_q.reshape(b * hkv, S_pad, stored_d)
+    ksf = k_s.reshape(b * hkv, S_pad, n_blk)
+    vqf = v_q.reshape(b * hkv, S_pad, stored_d)
+    vsf = v_s.reshape(b * hkv, S_pad, n_blk)
+
+    def kv_index(g, j):
+        return (g // hq) * hkv + (g % hq) // ratio, j, 0
+
+    kernel = functools.partial(
+        _quant_kernel, bk=bk, window=window, softcap=softcap, scale=scale,
+        fmt=fmt, packed=packed, d=d, blk=blk)
+    out = compat.pallas_call(
+        kernel,
+        grid=(b * hq, S_pad // bk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda g, j: (g // hq,)),          # pos
+            pl.BlockSpec((1, 1, d), lambda g, j: (g, 0, 0)),      # q
+            pl.BlockSpec((1, bk, stored_d), kv_index),            # k codes
+            pl.BlockSpec((1, bk, n_blk), kv_index),               # k scales
+            pl.BlockSpec((1, bk, stored_d), kv_index),            # v codes
+            pl.BlockSpec((1, bk, n_blk), kv_index),               # v scales
+            pl.BlockSpec((1, bk), lambda g, j: (g // hq, j)),     # slot_pos
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda g, j: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        dimension_semantics=("parallel", "arbitrary"),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qf, kqf, ksf, vqf, vsf, slot_pos)
     return out.reshape(b, hq, d)

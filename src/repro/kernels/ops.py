@@ -22,6 +22,8 @@ from repro.kernels import ssd_scan as _ssd
 # imported up-front: the submodule name is shadowed by this module's
 # flash_decode wrapper once repro.kernels.__init__ finishes
 from repro.kernels.flash_decode import flash_decode_bhd as _flash_decode_bhd
+from repro.kernels.flash_decode import (
+    flash_decode_quant_bhd as _flash_decode_quant_bhd)
 from repro.kernels.probe_chase import chase, make_chase_buffer  # noqa: F401
 from repro.kernels.probe_dep_chain import dep_chain  # noqa: F401
 from repro.kernels.probe_mma import mma_probe  # noqa: F401
@@ -70,6 +72,33 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         q[:, 0], k_cache.transpose(0, 2, 1, 3),
         v_cache.transpose(0, 2, 1, 3),
         slot_pos, pos, window=window, softcap=softcap, scale=scale,
+        bk=bk, interpret=_interpret())
+    return out[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "fmt", "window", "softcap", "scale", "bk"))
+def flash_decode_quant(q: jax.Array, kv_cache: dict, pos: jax.Array, *,
+                       fmt: str,
+                       window: Optional[int] = None,
+                       softcap: Optional[float] = None,
+                       scale: Optional[float] = None,
+                       bk: int = 512) -> jax.Array:
+    """Model-layout flash decode over a *quantized* KV cache.
+
+    q (b, 1, hq, d); ``kv_cache`` is the quantized ring-cache dict from
+    ``repro.models.attention.init_kv_cache(kv_format=fmt)`` (``k_q``/
+    ``v_q`` packed codes (b, S, hkv, stored_d), ``k_s``/``v_s`` 1-byte
+    e8m0 scales, ``slot_pos``); pos (b,) -> (b, 1, hq, d).  The kernel
+    streams the packed bytes and expands them in VMEM — HBM KV traffic
+    is the true stored byte count (fp4 ≈ 0.53 B/elem), not the dense
+    width."""
+    t = lambda a: a.transpose(0, 2, 1, 3)
+    out = _flash_decode_quant_bhd(
+        q[:, 0], t(kv_cache["k_q"]), t(kv_cache["k_s"]),
+        t(kv_cache["v_q"]), t(kv_cache["v_s"]),
+        kv_cache["slot_pos"], pos, fmt=fmt,
+        window=window, softcap=softcap, scale=scale,
         bk=bk, interpret=_interpret())
     return out[:, None]
 

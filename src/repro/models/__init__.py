@@ -8,3 +8,4 @@ from repro.models.model import (  # noqa: F401
     decode_inputs_spec,
     make_batch,
 )
+from repro.models.transformer import kv_cache_stats  # noqa: F401

@@ -6,6 +6,17 @@ ring-buffer KV caches for decode.
 Memory behavior is the point: naive attention materializes the (sq, skv)
 score matrix — 2 GiB/head at 32k — so every path here is O(sq * chunk).
 Softmax statistics are always fp32 (paper §V precision discipline).
+
+Decode at long context is bound by the KV-cache *read* (§VI.D: the KV
+bytes, not the weights, dominate HBM traffic past a few k positions), so
+the cache supports **quantized storage**: ``init_kv_cache(kv_format=...)``
+holds K/V as fp8-container bytes or nibble-packed fp4/fp6 codes plus
+1-byte e8m0 block scales along ``head_dim``, and the write paths
+(:func:`cache_write_decode` / :func:`cache_write_prefill`) quantize on
+the way in — trace-safe ``repro.lowbits`` arithmetic, since decode
+writes happen inside a jitted step.  :func:`cache_kv` materializes the
+dense view for the XLA oracle; ``repro.kernels.flash_decode`` streams
+the packed bytes directly and expands them in VMEM.
 """
 
 from __future__ import annotations
@@ -16,6 +27,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat, lowbits
 from repro.configs.base import ArchConfig
 from repro.models.layers import apply_rope, dense_init
 
@@ -236,45 +248,167 @@ def cache_capacity(max_seq: int, window: Optional[int]) -> int:
     return min(max_seq, window) if window else max_seq
 
 
+def kv_scale_block(head_dim: int) -> int:
+    """Scale-block size along head_dim: the mxfp BLOCK (32) when it
+    divides, else the largest power-of-two divisor (reduced smoke
+    configs run head_dim 16)."""
+    for blk in (32, 16, 8, 4, 2, 1):
+        if head_dim % blk == 0:
+            return blk
+    return 1
+
+
+def quantize_kv(x: jax.Array, kv_format: str) -> Tuple[jax.Array, jax.Array]:
+    """Quantize (..., d) activations into KV-cache storage form.
+
+    Returns (stored, scale_codes):
+      * fp8: ``stored`` (..., d) in the registry container dtype,
+      * fp4/fp6: ``stored`` (..., d*bits/8) uint8 nibble/3-byte-group
+        packed codes (``lowbits.encode_codes`` + ``pack_codes``),
+      * ``scale_codes`` (..., d/kv_scale_block(d)) uint8 e8m0 exponents.
+
+    Pure trace-safe arithmetic throughout — this runs inside the jitted
+    decode step on every token.
+    """
+    spec = compat.dtype_spec(kv_format)
+    *lead, d = x.shape
+    blk = kv_scale_block(d)
+    xb = x.astype(jnp.float32).reshape(*lead, d // blk, blk)
+    s_codes = lowbits.e8m0_scale_code(jnp.max(jnp.abs(xb), axis=-1),
+                                      spec.max_finite)
+    vals = xb / lowbits.e8m0_decode(s_codes)[..., None]
+    vals = vals.reshape(*lead, d)
+    if spec.packed is not None:
+        if d % spec.packed.values_per_group:
+            raise ValueError(
+                f"head_dim {d} not a multiple of {kv_format}'s pack "
+                f"group ({spec.packed.values_per_group})")
+        stored = lowbits.pack_codes(
+            lowbits.encode_codes(vals, kv_format), kv_format)
+    else:
+        stored = vals.astype(spec.container)
+    return stored, s_codes
+
+
+def dequantize_kv(stored: jax.Array, scale_codes: jax.Array,
+                  kv_format: str, head_dim: int,
+                  out_dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_kv`: (..., stored) + scale codes ->
+    (..., head_dim) dense values.  Same arithmetic the Pallas
+    flash-decode leg applies per VMEM tile."""
+    spec = compat.dtype_spec(kv_format)
+    if spec.packed is not None:
+        vals = lowbits.decode(
+            lowbits.unpack_codes(stored, kv_format), kv_format)
+    else:
+        vals = stored.astype(jnp.float32)
+    *lead, d = vals.shape
+    blk = kv_scale_block(head_dim)
+    scales = lowbits.e8m0_decode(scale_codes)
+    out = (vals.reshape(*lead, d // blk, blk) * scales[..., None])
+    return out.reshape(*lead, d).astype(out_dtype)
+
+
 def init_kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int,
-                  dtype) -> dict:
-    return {
-        "k": jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
-        "v": jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
-        "slot_pos": jnp.full((batch, capacity), -1, jnp.int32),
-    }
+                  dtype, kv_format: Optional[str] = None) -> dict:
+    """Ring-cache pytree.  Dense layout (kv_format None): full-width
+    ``k``/``v`` at ``dtype``.  Quantized layout: ``k_q``/``v_q`` stored
+    codes + ``k_s``/``v_s`` 1-byte e8m0 scales (see :func:`quantize_kv`);
+    fp4 lands at 0.5 + 1/32 ≈ 0.53 B/elem vs 2 B/elem bf16."""
+    if kv_format is None:
+        return {
+            "k": jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+            "v": jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+            "slot_pos": jnp.full((batch, capacity), -1, jnp.int32),
+        }
+    spec = compat.dtype_spec(kv_format)
+    if spec.packed is not None:
+        ps = spec.packed
+        stored_d = head_dim // ps.values_per_group * ps.bytes_per_group
+        stored_dtype = jnp.uint8
+    else:
+        stored_d = head_dim
+        stored_dtype = spec.container
+    n_blk = head_dim // kv_scale_block(head_dim)
+    z = jnp.zeros((batch, capacity, n_kv, stored_d), stored_dtype)
+    s = jnp.zeros((batch, capacity, n_kv, n_blk), jnp.uint8)
+    return {"k_q": z, "k_s": s, "v_q": z, "v_s": s,
+            "slot_pos": jnp.full((batch, capacity), -1, jnp.int32)}
+
+
+def is_quantized_cache(cache: dict) -> bool:
+    return "k_q" in cache
+
+
+def cache_kv(cache: dict, kv_format: Optional[str], head_dim: int,
+             out_dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """Dense (k, v) view of a cache, dequantizing if stored quantized.
+
+    The XLA decode path materializes this per step (the oracle); the
+    Pallas kernel leg (``repro.kernels.flash_decode_quant``) reads the
+    packed arrays directly instead."""
+    if not is_quantized_cache(cache):
+        return cache["k"], cache["v"]
+    assert kv_format is not None, "quantized cache needs its kv_format"
+    k = dequantize_kv(cache["k_q"], cache["k_s"], kv_format, head_dim,
+                      out_dtype)
+    v = dequantize_kv(cache["v_q"], cache["v_s"], kv_format, head_dim,
+                      out_dtype)
+    return k, v
 
 
 def cache_write_decode(cache: dict, k: jax.Array, v: jax.Array,
-                       pos: jax.Array) -> dict:
+                       pos: jax.Array,
+                       kv_format: Optional[str] = None) -> dict:
     """Write one (b, 1, hkv, d) k/v at per-row slot ``pos % capacity``.
 
     pos: (b,) — rows may sit at different positions (continuous batching),
-    so the write is a per-row scatter (one distinct slot per row)."""
-    b, cap = cache["k"].shape[0], cache["k"].shape[1]
+    so the write is a per-row scatter (one distinct slot per row).
+    Quantized caches encode on the way in (trace-safe)."""
+    sp_arr = cache["slot_pos"]
+    b, cap = sp_arr.shape
     slot = (pos % cap).astype(jnp.int32)
     rows = jnp.arange(b)
+    sp = sp_arr.at[rows, slot].set(pos.astype(jnp.int32))
+    if is_quantized_cache(cache):
+        assert kv_format is not None, "quantized cache needs its kv_format"
+        k_q, k_s = quantize_kv(k[:, 0], kv_format)
+        v_q, v_s = quantize_kv(v[:, 0], kv_format)
+        return {"k_q": cache["k_q"].at[rows, slot].set(k_q),
+                "k_s": cache["k_s"].at[rows, slot].set(k_s),
+                "v_q": cache["v_q"].at[rows, slot].set(v_q),
+                "v_s": cache["v_s"].at[rows, slot].set(v_s),
+                "slot_pos": sp}
     k_new = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
     v_new = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
-    sp = cache["slot_pos"].at[rows, slot].set(pos.astype(jnp.int32))
     return {"k": k_new, "v": v_new, "slot_pos": sp}
 
 
-def cache_write_prefill(cache: dict, k: jax.Array, v: jax.Array) -> dict:
+def cache_write_prefill(cache: dict, k: jax.Array, v: jax.Array,
+                        kv_format: Optional[str] = None) -> dict:
     """Bulk-write a prefill's K/V (b, s, hkv, d) into the (ring) cache.
 
     Keeps the last ``capacity`` positions; their slots ``p % capacity`` are
-    distinct, so the scatter is a permutation (well-defined).
+    distinct, so the scatter is a permutation (well-defined).  Quantized
+    caches encode the kept span on the way in.
     """
-    cap = cache["k"].shape[1]
+    cap = cache["slot_pos"].shape[1]
     s = k.shape[1]
     take = min(s, cap)
-    k_t = k[:, s - take:].astype(cache["k"].dtype)
-    v_t = v[:, s - take:].astype(cache["v"].dtype)
     positions = jnp.arange(s - take, s, dtype=jnp.int32)
     slots = positions % cap
-    k_new = cache["k"].at[:, slots].set(k_t)
-    v_new = cache["v"].at[:, slots].set(v_t)
     sp = cache["slot_pos"].at[:, slots].set(
         jnp.broadcast_to(positions, (k.shape[0], take)))
+    k_t, v_t = k[:, s - take:], v[:, s - take:]
+    if is_quantized_cache(cache):
+        assert kv_format is not None, "quantized cache needs its kv_format"
+        k_q, k_s = quantize_kv(k_t, kv_format)
+        v_q, v_s = quantize_kv(v_t, kv_format)
+        return {"k_q": cache["k_q"].at[:, slots].set(k_q),
+                "k_s": cache["k_s"].at[:, slots].set(k_s),
+                "v_q": cache["v_q"].at[:, slots].set(v_q),
+                "v_s": cache["v_s"].at[:, slots].set(v_s),
+                "slot_pos": sp}
+    k_new = cache["k"].at[:, slots].set(k_t.astype(cache["k"].dtype))
+    v_new = cache["v"].at[:, slots].set(v_t.astype(cache["v"].dtype))
     return {"k": k_new, "v": v_new, "slot_pos": sp}

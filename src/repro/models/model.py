@@ -16,8 +16,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models.transformer import (
-    VLM_PATCHES, init_cache, init_lm, lm_decode_step, lm_features,
-    lm_forward, lm_prefill, unembed_weight)
+    VLM_PATCHES, init_cache, init_lm, kv_cache_stats, lm_decode_step,
+    lm_features, lm_forward, lm_prefill, unembed_weight)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +48,12 @@ class Model:
 
     def init_cache(self, batch: int, max_seq: int, enc_len: int = 0):
         return init_cache(self.cfg, batch, max_seq, enc_len)
+
+    def kv_cache_stats(self, cache: dict) -> dict:
+        """Measured attention-KV byte accounting for ``cache`` (see
+        ``repro.models.transformer.kv_cache_stats``)."""
+        return kv_cache_stats(cache, self.cfg)
+
 
 def build_model(cfg: ArchConfig) -> Model:
     return Model(cfg)

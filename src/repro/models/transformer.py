@@ -281,11 +281,15 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
 
     ``cfg.cache_dtype`` (e.g. float8_e4m3fn) stores attention KV at
     reduced precision — decode is weight/KV-read bound, so this is the
-    §VII.B serving-precision lever applied to the cache.  SSM conv/state
-    stay at compute/fp32 precision (tiny, and the recurrence compounds
-    rounding)."""
+    §VII.B serving-precision lever applied to the cache.
+    ``cfg.kv_format`` goes further: truly *quantized* KV storage
+    (packed fp8/fp4 codes + 1-byte e8m0 block scales; fp4 ≈ 0.53 B/elem
+    measured vs 2 B/elem bf16 — the §VI.D read-bandwidth lever).  SSM
+    conv/state stay at compute/fp32 precision (tiny, and the recurrence
+    compounds rounding)."""
     dtype = jnp.dtype(cfg.compute_dtype)
     kv_dtype = jnp.dtype(cfg.cache_dtype or cfg.compute_dtype)
+    kv_fmt = cfg.kv_format or None
     pattern = cfg.block_pattern()
     n_p = cfg.n_periods
     cache: dict = {}
@@ -294,7 +298,8 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
         if blk.mixer == "attn":
             cap = attn.cache_capacity(max_seq, blk.window)
             kv = attn.init_kv_cache(batch, cap, cfg.n_kv_heads,
-                                    cfg.head_dim, kv_dtype)
+                                    cfg.head_dim, kv_dtype,
+                                    kv_format=kv_fmt)
             entry["kv"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (n_p,) + a.shape), kv)
             if blk.cross_attn:
@@ -309,6 +314,38 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
     if cfg.is_encoder_decoder:
         cache["enc_out"] = jnp.zeros((batch, enc_len, cfg.d_model), dtype)
     return cache
+
+
+def kv_cache_stats(cache: dict, cfg: ArchConfig) -> dict:
+    """*Measured* attention-KV storage accounting over a cache pytree.
+
+    Walks the ``pos*``/``kv`` entries (cross-attn KV, SSM state, and the
+    int32 ``slot_pos`` bookkeeping are excluded — they are format-
+    independent) and reports ``sum(arr.nbytes)`` over what is actually
+    stored, the number the Tab VIII / long-context artifacts quote:
+
+      * ``kv_bytes``        — total stored K/V payload (codes + scales),
+      * ``bytes_per_elem``  — payload / logical K,V element count (fp4 +
+        e8m0 byte scales ≈ 0.53 at head_dim 128; 2.0 for bf16),
+      * ``bytes_per_token`` — HBM bytes one cached token position costs
+        across the whole layer stack (what each decoded token *reads*
+        per position of context, and *writes* once).
+    """
+    kv_bytes, elems, per_token = 0, 0, 0.0
+    for name, entry in cache.items():
+        if not name.startswith("pos") or "kv" not in entry:
+            continue
+        kv = entry["kv"]
+        n_p, b, cap = kv["slot_pos"].shape
+        payload = sum(v.nbytes for k2, v in kv.items() if k2 != "slot_pos")
+        kv_bytes += payload
+        elems += 2 * n_p * b * cap * cfg.n_kv_heads * cfg.head_dim
+        per_token += payload / (b * cap)
+    return {"kv_format": cfg.kv_format or (cfg.cache_dtype
+                                           or cfg.compute_dtype),
+            "kv_bytes": int(kv_bytes),
+            "bytes_per_elem": kv_bytes / elems if elems else 0.0,
+            "bytes_per_token": per_token}
 
 
 def lm_prefill(params: dict, batch: Dict[str, jax.Array], cfg: ArchConfig,
@@ -334,9 +371,12 @@ def lm_prefill(params: dict, batch: Dict[str, jax.Array], cfg: ArchConfig,
                     p["attn"], h, cfg, blk, return_kv=True)
                 x = x + out
                 cap = attn.cache_capacity(max_seq, blk.window)
+                kv_fmt = cfg.kv_format or None
                 kv0 = attn.init_kv_cache(x.shape[0], cap, cfg.n_kv_heads,
-                                         cfg.head_dim, k.dtype)
-                entry["kv"] = attn.cache_write_prefill(kv0, k, v)
+                                         cfg.head_dim, k.dtype,
+                                         kv_format=kv_fmt)
+                entry["kv"] = attn.cache_write_prefill(kv0, k, v,
+                                                       kv_format=kv_fmt)
                 if blk.cross_attn and enc_out is not None:
                     h = rms_norm(p["ln_cross"], x, cfg.norm_eps)
                     q = attn.project_q(p["cross"], h)
@@ -402,9 +442,13 @@ def lm_decode_step(params: dict, cache: dict, token: jax.Array,
                 k, v = attn.project_kv(p["attn"], h)
                 q = apply_rope(q, positions, cfg.rope_theta)
                 k = apply_rope(k, positions, cfg.rope_theta)
-                kv = attn.cache_write_decode(c["kv"], k, v, pos)
+                kv_fmt = cfg.kv_format or None
+                kv = attn.cache_write_decode(c["kv"], k, v, pos,
+                                             kv_format=kv_fmt)
+                kc, vc = attn.cache_kv(kv, kv_fmt, cfg.head_dim,
+                                       out_dtype=x.dtype)
                 o = attn.decode_attention(
-                    q, kv["k"], kv["v"], kv["slot_pos"], pos,
+                    q, kc, vc, kv["slot_pos"], pos,
                     window=blk.window, softcap=cfg.attn_logit_softcap)
                 x = x + attn.project_out(p["attn"], o)
                 entry["kv"] = kv

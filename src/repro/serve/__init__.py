@@ -5,6 +5,7 @@ from repro.serve.quant import (  # noqa: F401
     LOW_PRECISION_FORMATS,
     dequantize_blockwise,
     dequantize_tree,
+    invalidate_format_table,
     quantize_blockwise,
     quantize_params,
     quantize_tree,

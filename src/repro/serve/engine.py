@@ -18,6 +18,20 @@ in true quantized storage (``serve.quant.quantize_tree`` — bit-packed
 ``packed=True``) as the HBM-resident source of truth, and materializes
 the dense compute copy the XLA path consumes.  ``weight_stats`` carries
 the *measured* stored-byte counts the Tab VIII benchmark reports.
+
+KV storage: with ``kv_format`` set, the pooled decode cache itself is
+blockwise-quantized (``repro.models.attention``: packed fp8/fp4 codes +
+1-byte e8m0 scales, quantize-on-write inside the jitted step) — at long
+context the KV read, not the weights, dominates decode HBM traffic
+(§VI.D), so this is the lever that actually moves the roofline.
+``kv_stats`` carries the measured stored KV bytes (per token and per
+element) next to the weight numbers.  Note the XLA decode step
+materializes a dense dequantized view of the cache per layer (like the
+weight path, XLA consumes dense arrays), so off-TPU the win is
+*footprint*, not step time; the streaming read win belongs to the
+Pallas leg (``repro.kernels.flash_decode_quant``, validated against
+this path's oracle in interpret mode — the same kernel-vs-XLA-twin
+split as flash_decode/decode_attention).
 """
 
 from __future__ import annotations
@@ -29,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import Model
+from repro.models.model import Model, build_model
 from repro.serve.quant import dequantize_tree, quantize_tree
 from repro.serve.sampler import sample_token
 
@@ -52,8 +66,16 @@ class ServeEngine:
     def __init__(self, model: Model, params, batch: int, max_seq: int,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  weight_format: Optional[str] = None, packed: bool = True,
+                 kv_format: Optional[str] = None,
                  compute_dtype=jnp.bfloat16):
+        if kv_format:
+            # rebind the model onto a config whose cache layer quantizes:
+            # every prefill/decode below then writes packed codes +
+            # 1-byte e8m0 scales instead of full-width K/V
+            model = build_model(
+                dataclasses.replace(model.cfg, kv_format=kv_format))
         self.model = model
+        self.kv_format = kv_format
         self.weight_store = None
         self.weight_stats: Optional[Dict] = None
         if weight_format is not None:
@@ -68,6 +90,9 @@ class ServeEngine:
         self.key = jax.random.PRNGKey(seed)
 
         self.cache = model.init_cache(batch, max_seq)
+        # measured KV storage accounting (codes + scales, what a decode
+        # step actually reads) — reported by Tab VIII next to weights
+        self.kv_stats: Dict = model.kv_cache_stats(self.cache)
         self.pos = np.zeros(batch, np.int64)          # next position per slot
         self.remaining = np.zeros(batch, np.int64)
         self.active: List[Optional[_Request]] = [None] * batch
@@ -83,6 +108,15 @@ class ServeEngine:
 
     # -- request management -------------------------------------------- #
     def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
+        """Enqueue a request.  Prompts must leave room for at least one
+        generated token: a prompt of ``max_seq`` or longer used to be
+        admitted anyway, setting ``pos`` past the cache so the first
+        decode step attended over a silently clipped prefill."""
+        if len(prompt) >= self.max_seq:
+            raise ValueError(
+                f"prompt length {len(prompt)} >= max_seq {self.max_seq}: "
+                f"the cache holds max_seq-1 prompt tokens plus the "
+                f"decode stream; truncate the prompt or raise max_seq")
         rid = self._next_id
         self._next_id += 1
         self.queue.append(_Request(rid, list(prompt), max_new_tokens))

@@ -80,3 +80,43 @@ def test_flash_decode_ring_wrap(key):
     want = decode_attention(q, kc, vc, slot, pos, window=40)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=2e-5)
+
+
+@pytest.mark.parametrize("S,bk,window,softcap", [
+    (200, 128, 64, None),        # padded tail + window
+    (200, 128, None, 20.0),      # padded tail + softcap
+    (130, 64, 48, 12.0),         # padded tail + both
+])
+def test_flash_decode_padding_with_flags(key, S, bk, window, softcap):
+    """S not divisible by bk combined with window/softcap: the padding
+    block must mask cleanly even when every flag is in play."""
+    q, kc, vc, slot = _setup(key, S=S)
+    pos = jnp.full((2,), S - 1, jnp.int32)
+    got = K.flash_decode(q, kc, vc, slot, pos, window=window,
+                         softcap=softcap, bk=bk)
+    want = decode_attention(q, kc, vc, slot, pos, window=window,
+                            softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5)
+
+
+def test_flash_decode_ring_wrap_padded(key):
+    """Ring wrap AND S not a multiple of bk (the padding edge): wrapped
+    slot positions in a 96-slot cache, 64-wide kernel blocks."""
+    b, S, h, d = 2, 96, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    kc = jax.random.normal(ks[1], (b, S, h, d))
+    vc = jax.random.normal(ks[2], (b, S, h, d))
+    # positions 150..245 wrapped into 96 slots (150 % 96 == 54)
+    base = jnp.arange(S)
+    slot = jnp.where(base < 54, base + 192, base + 96)[None, :]
+    slot = jnp.broadcast_to(slot, (b, S)).astype(jnp.int32)
+    pos = jnp.asarray([245, 200], jnp.int32)   # row 1 mid-ring
+    for window, softcap in [(None, None), (50, None), (64, 18.0)]:
+        got = K.flash_decode(q, kc, vc, slot, pos, window=window,
+                             softcap=softcap, bk=64)
+        want = decode_attention(q, kc, vc, slot, pos, window=window,
+                                softcap=softcap)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5)

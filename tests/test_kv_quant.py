@@ -1,0 +1,373 @@
+"""Quantized KV-cache decode path + the quantizer bugs that blocked it:
+e8m0 1-byte scale codec, trace-safe sub-byte rounding, cache round
+trips, the flash_decode dequant-in-VMEM leg, and engine plumbing."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels as K
+from repro import compat, lowbits
+from repro.configs import get_config
+from repro.models import attention as A
+from repro.models import build_model
+from repro.serve import ServeEngine
+from repro.serve import quant as Q
+
+KV_FORMATS = ("float8_e4m3fn", "float4_e2m1fn", "float6_e2m3fn")
+
+
+# --------------------------------------------------------------------- #
+# e8m0 scale codec (lowbits)
+# --------------------------------------------------------------------- #
+
+def test_e8m0_round_trip_all_codes():
+    codes = np.arange(255, dtype=np.uint8)           # 255 = NaN, unused
+    scales = lowbits.e8m0_decode(codes)
+    assert np.array_equal(lowbits.e8m0_encode(scales), codes)
+
+
+def test_e8m0_encode_clamps():
+    s = np.asarray([0.0, 1e-45, 3.4e38], np.float32)
+    codes = lowbits.e8m0_encode(s)
+    assert codes[0] == 0 and codes[1] == 0           # floor: 2^-127
+    assert codes[2] == 254                           # ceil: 2^127
+
+
+def test_e8m0_scale_code_tiny_absmax_representable():
+    """Satellite regression: a tiny absmax used to produce exponents no
+    e8m0 byte can hold; now every emitted scale is in [2^-127, 2^127]."""
+    absmax = np.asarray([0.0, 1e-38, 1e-30, 6.0, 3e38], np.float32)
+    for fmt_max in (6.0, 448.0, 57344.0):
+        codes = lowbits.e8m0_scale_code(absmax, fmt_max)
+        scales = lowbits.e8m0_decode(codes)
+        assert np.all(scales >= np.exp2(np.float32(-127)))
+        assert np.all(scales <= np.exp2(np.float32(127)))
+        # round trip through the byte store is lossless
+        assert np.array_equal(lowbits.e8m0_encode(scales), codes)
+
+
+def test_quant_scale_rule_matches_codec():
+    """serve.quant._e8m0_scale must equal decode(scale_code(...)) — the
+    quantizer's rule and the 1-byte store cannot drift apart."""
+    absmax = jnp.asarray([1e-33, 0.3, 1.0, 6.0, 100.0], jnp.float32)
+    got = Q._e8m0_scale(absmax, 6.0)
+    want = lowbits.e8m0_decode(lowbits.e8m0_scale_code(absmax, 6.0))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # still the covering property: absmax/scale <= fmt_max
+    assert np.all(np.asarray(absmax) / np.asarray(got) <= 6.0 * (1 + 1e-6))
+
+
+def test_e8m0_trace_safe():
+    f = jax.jit(lambda s: lowbits.e8m0_decode(lowbits.e8m0_encode(s)))
+    s = jnp.exp2(jnp.arange(-10.0, 11.0))
+    np.testing.assert_array_equal(np.asarray(f(s)), np.asarray(s))
+
+
+# --------------------------------------------------------------------- #
+# trace-safe rounding / encoding (lowbits arithmetic twins of ml_dtypes)
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("fmt", ["float4_e2m1fn", "float6_e2m3fn",
+                                 "float6_e3m2fn"])
+def test_quantize_values_matches_ml_dtypes(fmt):
+    spec = lowbits.packed_spec(fmt)
+    rng = np.random.default_rng(0)
+    v = (rng.standard_normal(4096)
+         * rng.choice([1e-3, 0.1, 1.0, 8.0], 4096)).astype(np.float32)
+    edge = np.asarray([0.0, -0.0, spec.max_finite, -spec.max_finite,
+                       1e30, -1e30, 2.0 ** (1 - spec.bias) / 2,
+                       2.0 ** (1 - spec.bias)], np.float32)
+    v = np.concatenate([v, edge])
+    want = v.astype(spec.code_dtype).astype(np.float32)
+    np.testing.assert_array_equal(lowbits.quantize_values(v, fmt), want)
+    got_jit = jax.jit(lambda x: lowbits.quantize_values(x, fmt))(
+        jnp.asarray(v))
+    np.testing.assert_array_equal(np.asarray(got_jit), want)
+
+
+@pytest.mark.parametrize("fmt", ["float4_e2m1fn", "float6_e2m3fn",
+                                 "float6_e3m2fn"])
+def test_encode_codes_bit_exact_all_codes(fmt):
+    spec = lowbits.packed_spec(fmt)
+    codes = np.arange(1 << spec.bits, dtype=np.int32)
+    vals = lowbits.decode(codes, fmt)
+    assert np.array_equal(lowbits.encode_codes(vals, fmt), codes)
+    jit_codes = jax.jit(lambda x: lowbits.encode_codes(x, fmt))(
+        jnp.asarray(vals))
+    assert np.array_equal(np.asarray(jit_codes), codes)
+
+
+@pytest.mark.parametrize("fmt", ["float4_e2m1fn", "float6_e2m3fn"])
+def test_pack_codes_matches_host_pack(fmt):
+    spec = lowbits.packed_spec(fmt)
+    rng = np.random.default_rng(1)
+    vals = lowbits.decode(
+        rng.integers(0, 1 << spec.bits, (3, 16)).astype(np.int32), fmt
+    ).astype(np.float32)
+    want = lowbits.pack(vals, fmt)
+    codes = lowbits.encode_codes(vals, fmt)
+    assert np.array_equal(lowbits.pack_codes(codes, fmt), want)
+    got_jit = jax.jit(lambda x: lowbits.pack_codes(
+        lowbits.encode_codes(x, fmt), fmt))(jnp.asarray(vals))
+    assert np.array_equal(np.asarray(got_jit), want)
+
+
+def test_pack_codes_rejects_odd_tail():
+    with pytest.raises(ValueError):
+        lowbits.pack_codes(np.zeros((3,), np.int32), "float4_e2m1fn")
+
+
+# --------------------------------------------------------------------- #
+# quantize_blockwise trace-safety (satellite regression: the fp6 host
+# rounding path crashed under jit/vmap via np.asarray on tracers)
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("fmt", ["float6_e2m3fn", "float6_e3m2fn",
+                                 "float4_e2m1fn"])
+def test_quantize_blockwise_jits_and_vmaps(key, fmt):
+    w = jax.random.normal(key, (4, 64))
+    q0, s0 = Q.quantize_blockwise(w, fmt)
+    qj, sj = jax.jit(lambda x: Q.quantize_blockwise(x, fmt))(w)
+    np.testing.assert_array_equal(np.asarray(q0, np.float32),
+                                  np.asarray(qj, np.float32))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(sj))
+    qv, sv = jax.vmap(lambda x: Q.quantize_blockwise(x, fmt))(w[:, None])
+    np.testing.assert_array_equal(np.asarray(qv[:, 0], np.float32),
+                                  np.asarray(q0, np.float32))
+
+
+# --------------------------------------------------------------------- #
+# format-table staleness (satellite regression: module-level lru_cache
+# survived registry changes)
+# --------------------------------------------------------------------- #
+
+def test_format_table_tracks_registry(monkeypatch):
+    full = compat.dtype_registry()
+    assert "float6_e2m3fn" in Q.LOW_PRECISION_FORMATS
+    shrunk = {k: v for k, v in full.items() if k != "float6_e2m3fn"}
+    monkeypatch.setattr(compat, "dtype_registry", lambda: shrunk)
+    assert "float6_e2m3fn" not in Q.LOW_PRECISION_FORMATS
+    assert "float8_e4m3fn" in Q.LOW_PRECISION_FORMATS
+    monkeypatch.undo()
+    assert "float6_e2m3fn" in Q.LOW_PRECISION_FORMATS
+    Q.invalidate_format_table()                      # explicit hook works
+    assert "float6_e2m3fn" in Q.LOW_PRECISION_FORMATS
+
+
+# --------------------------------------------------------------------- #
+# packed e8m0 scale store in the weight quantizer
+# --------------------------------------------------------------------- #
+
+def test_quantize_tree_stores_byte_scales(key):
+    params = {"w1": jax.random.normal(key, (64, 64))}
+    store, stats = Q.quantize_tree(params, "float4_e2m1fn", packed=True)
+    leaf = store["w1"]
+    assert leaf["scales"].dtype == jnp.uint8
+    assert leaf["scale_fmt"] == "e8m0"
+    # 0.5 B/elem codes + 1 B per 32-block scale
+    assert leaf["q"].nbytes == 64 * 64 // 2
+    assert leaf["scales"].nbytes == 64 * (64 // Q.BLOCK)
+    # dequant matches the fp32-scale reference exactly (scales are
+    # powers of two, losslessly byte-coded)
+    q, s = Q.quantize_blockwise(params["w1"], "float4_e2m1fn")
+    want = Q.dequantize_blockwise(q, s, jnp.float32)
+    got = Q.dequantize_tree(store, jnp.float32)["w1"]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantize_params_counts_byte_scales(key):
+    params = {"w1": jax.random.normal(key, (64, 64))}
+    _, stats = Q.quantize_params(params, "float4_e2m1fn")
+    want = int(64 * 64 * 0.5) + 64 * (64 // Q.BLOCK)
+    assert stats["quantized_bytes"] == want
+
+
+# --------------------------------------------------------------------- #
+# quantized KV cache (models.attention)
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("fmt", KV_FORMATS)
+def test_kv_quantize_round_trip_error(key, fmt):
+    x = jax.random.normal(key, (2, 5, 3, 32))
+    stored, scales = A.quantize_kv(x, fmt)
+    back = A.dequantize_kv(stored, scales, fmt, 32)
+    err = float(jnp.max(jnp.abs(back - x)))
+    spec = compat.dtype_spec(fmt)
+    # blockwise e8m0 scaling bounds the relative step size
+    tol = {"float8_e4m3fn": 0.07, "float6_e2m3fn": 0.07,
+           "float4_e2m1fn": 0.3}[fmt]
+    assert err <= tol * float(jnp.max(jnp.abs(x)))
+    if spec.packed is not None:
+        assert stored.dtype == jnp.uint8
+        assert stored.shape[-1] == 32 * spec.packed.bits // 8
+    assert scales.dtype == jnp.uint8
+
+
+@pytest.mark.parametrize("fmt", ["float8_e4m3fn", "float4_e2m1fn"])
+def test_cache_write_decode_quantized_matches_bulk(key, fmt):
+    """Per-token decode writes land the same stored bytes as one
+    prefill bulk write of the same values."""
+    b, cap, h, d = 2, 8, 2, 16
+    ks = jax.random.split(key, 2)
+    k = jax.random.normal(ks[0], (b, cap, h, d))
+    v = jax.random.normal(ks[1], (b, cap, h, d))
+    bulk = A.cache_write_prefill(
+        A.init_kv_cache(b, cap, h, d, jnp.float32, kv_format=fmt),
+        k, v, kv_format=fmt)
+    step = A.init_kv_cache(b, cap, h, d, jnp.float32, kv_format=fmt)
+    write = jax.jit(lambda c, kk, vv, p: A.cache_write_decode(
+        c, kk, vv, p, kv_format=fmt))
+    for p in range(cap):
+        pos = jnp.full((b,), p, jnp.int32)
+        step = write(step, k[:, p:p + 1], v[:, p:p + 1], pos)
+    for name in ("k_q", "k_s", "v_q", "v_s", "slot_pos"):
+        np.testing.assert_array_equal(np.asarray(step[name]),
+                                      np.asarray(bulk[name]), err_msg=name)
+
+
+@pytest.mark.parametrize("fmt", ["float8_e4m3fn", "float4_e2m1fn"])
+def test_quantized_decode_matches_quantize_then_dense(key, fmt):
+    """decode_attention over the quantized cache == decode_attention
+    over the explicitly dequantized K/V (the quantize-then-dense
+    reference), and tracks the unquantized oracle within tolerance."""
+    b, S, hq, hkv, d = 2, 64, 4, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, 1, hq, d))
+    kd = jax.random.normal(ks[1], (b, S, hkv, d))
+    vd = jax.random.normal(ks[2], (b, S, hkv, d))
+    cache = A.cache_write_prefill(
+        A.init_kv_cache(b, S, hkv, d, jnp.float32, kv_format=fmt),
+        kd, vd, kv_format=fmt)
+    pos = jnp.full((b,), S - 1, jnp.int32)
+    kc, vc = A.cache_kv(cache, fmt, d)
+    got = A.decode_attention(q, kc, vc, cache["slot_pos"], pos)
+    # reference: quantize-then-dense by hand
+    k_ref = A.dequantize_kv(*A.quantize_kv(kd, fmt), fmt, d)
+    v_ref = A.dequantize_kv(*A.quantize_kv(vd, fmt), fmt, d)
+    want = A.decode_attention(q, k_ref, v_ref, cache["slot_pos"], pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6)
+    dense = A.decode_attention(q, kd, vd, cache["slot_pos"], pos)
+    tol = 0.1 if fmt == "float8_e4m3fn" else 0.6
+    assert float(jnp.max(jnp.abs(got - dense))) < tol
+
+
+# --------------------------------------------------------------------- #
+# flash_decode quantized leg (dequant-in-VMEM) vs the oracle
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("fmt", ["float8_e4m3fn", "float4_e2m1fn"])
+@pytest.mark.parametrize("S,bk,window,softcap", [
+    (128, 64, None, None),
+    (200, 128, 40, None),         # padded tail + window
+    (96, 64, None, 15.0),         # padded tail + softcap
+])
+def test_flash_decode_quant_matches_oracle(key, fmt, S, bk, window,
+                                           softcap):
+    b, hq, hkv, d = 2, 4, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, 1, hq, d))
+    kd = jax.random.normal(ks[1], (b, S, hkv, d))
+    vd = jax.random.normal(ks[2], (b, S, hkv, d))
+    cache = A.cache_write_prefill(
+        A.init_kv_cache(b, S, hkv, d, jnp.float32, kv_format=fmt),
+        kd, vd, kv_format=fmt)
+    pos = jnp.asarray([S - 1, S // 2], jnp.int32)
+    got = K.flash_decode_quant(q, cache, pos, fmt=fmt, window=window,
+                               softcap=softcap, bk=bk)
+    kc, vc = A.cache_kv(cache, fmt, d)
+    want = A.decode_attention(q, kc, vc, cache["slot_pos"], pos,
+                              window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5)
+
+
+def test_flash_decode_quant_ring_wrap(key):
+    """Quantized leg over a wrapped ring cache (decode writes past the
+    capacity), vs the dequantized oracle."""
+    fmt = "float4_e2m1fn"
+    b, cap, h, d = 1, 32, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    cache = A.init_kv_cache(b, cap, h, d, jnp.float32, kv_format=fmt)
+    for p in range(40):                               # wraps past 32
+        kv = jax.random.normal(jax.random.fold_in(ks[1], p), (b, 1, h, d))
+        vv = jax.random.normal(jax.random.fold_in(ks[2], p), (b, 1, h, d))
+        cache = A.cache_write_decode(cache, kv, vv,
+                                     jnp.full((b,), p, jnp.int32),
+                                     kv_format=fmt)
+    pos = jnp.full((b,), 39, jnp.int32)
+    got = K.flash_decode_quant(q, cache, pos, fmt=fmt, window=20, bk=16)
+    kc, vc = A.cache_kv(cache, fmt, d)
+    want = A.decode_attention(q, kc, vc, cache["slot_pos"], pos, window=20)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5)
+
+
+# --------------------------------------------------------------------- #
+# model + engine plumbing
+# --------------------------------------------------------------------- #
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("gptneox-1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.mark.parametrize("fmt", ["float8_e4m3fn", "float4_e2m1fn"])
+def test_model_decode_quantized_kv_tracks_dense(small_model, fmt):
+    """Full decode steps with kv_format match the dense-cache model to
+    quantization tolerance (greedy path stays usable)."""
+    cfg, model, params = small_model
+    qmodel = build_model(dataclasses.replace(cfg, kv_format=fmt))
+    batch = {"tokens": jnp.asarray([[5, 7, 9, 11]], jnp.int32)}
+    lg_d, cache_d = model.prefill(params, batch, 32)
+    lg_q, cache_q = qmodel.prefill(params, batch, 32)
+    # prefill attention runs on pre-quantization K/V: identical logits
+    np.testing.assert_array_equal(np.asarray(lg_d), np.asarray(lg_q))
+    tok = jnp.asarray([3], jnp.int32)
+    step_d = jax.jit(model.decode_step)
+    step_q = jax.jit(qmodel.decode_step)
+    for p in range(4, 8):
+        pos = jnp.asarray([p], jnp.int32)
+        lg_d, cache_d = step_d(params, cache_d, tok, pos)
+        lg_q, cache_q = step_q(params, cache_q, tok, pos)
+    denom = float(jnp.max(jnp.abs(lg_d))) + 1e-9
+    rel = float(jnp.max(jnp.abs(lg_d - lg_q))) / denom
+    assert rel < (0.05 if fmt == "float8_e4m3fn" else 0.25)
+
+
+def test_engine_kv_format_stats_and_completion(small_model):
+    cfg, model, params = small_model
+    stats = {}
+    for fmt in (None, "float8_e4m3fn", "float4_e2m1fn"):
+        eng = ServeEngine(model, params, batch=2, max_seq=32,
+                          kv_format=fmt)
+        for i in range(3):
+            eng.submit([1 + i, 2, 3], max_new_tokens=4)
+        results = eng.run()
+        assert all(len(r.tokens) == 4 for r in results)
+        stats[fmt] = eng.kv_stats
+    # measured bytes shrink monotonically; fp4 + byte scales <= 0.6 B/elem
+    assert (stats[None]["kv_bytes"] > stats["float8_e4m3fn"]["kv_bytes"]
+            > stats["float4_e2m1fn"]["kv_bytes"])
+    assert stats["float4_e2m1fn"]["bytes_per_elem"] <= 0.6
+    assert stats["float8_e4m3fn"]["bytes_per_elem"] <= 1.25
+
+
+def test_engine_rejects_overlong_prompt(small_model):
+    """Satellite regression: a prompt with len >= max_seq used to be
+    admitted with pos past the cache (silently clipped prefill)."""
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, batch=1, max_seq=16)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(list(range(16)), max_new_tokens=2)
+    eng.submit(list(range(15)), max_new_tokens=4)      # 15 < 16: admitted
+    results = eng.run()
+    assert len(results) == 1 and len(results[0].tokens) >= 1
