@@ -24,6 +24,7 @@ MODULES = [
     "fig6_10_memory",
     "tab7_gemm",
     "tab8_inference",
+    "serve_throughput",
     "collectives_bench",
     "roofline_table",
     "paper_claims",

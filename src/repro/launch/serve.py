@@ -22,6 +22,10 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--decode-block", type=int, default=16,
+                    help="decode steps fused per dispatch (1 = per-token)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens per pooled-prefill dispatch")
     ap.add_argument("--precision", default="bfloat16",
                     help="float32|bfloat16|float8_e4m3fn|float8_e5m2|"
                          "float6_e2m3fn|float6_e3m2fn|float4_e2m1fn")
@@ -43,7 +47,9 @@ def main() -> None:
 
     engine = ServeEngine(model, params, batch=args.batch,
                          max_seq=args.max_seq,
-                         temperature=args.temperature)
+                         temperature=args.temperature,
+                         decode_block=args.decode_block,
+                         prefill_chunk=args.prefill_chunk)
     key = jax.random.PRNGKey(1)
     for i in range(args.requests):
         key, sub = jax.random.split(key)

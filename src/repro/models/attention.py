@@ -210,32 +210,52 @@ def attention(q, k, v, *, causal=True, window=None, softcap=None,
 # Decode (single new token against a — possibly ring — KV cache)
 # --------------------------------------------------------------------- #
 
+def cache_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                    slot_pos: jax.Array, q_positions: jax.Array, *,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Attention of ``sq`` query tokens against a (ring) cache.
+
+    q: (b, sq, hq, d); k_cache/v_cache: (b, S, hkv, d);
+    slot_pos: (b, S) int32 — absolute position held by each slot, -1 empty;
+    q_positions: (b, sq) int32 absolute position of each query token.
+
+    Masking is entirely position-computed (``slot_pos <= q_pos``), so it
+    covers both decode (sq=1 attending over history) and chunked prefill
+    (sq=chunk attending over history *and* itself causally — a chunk
+    token sees earlier chunk tokens because their slots were written
+    before this call with smaller absolute positions).
+    """
+    b, sq, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = _group(q, hkv)
+    s = _scores(qg, k_cache, scale, softcap)          # (b,h,g,sq,S)
+    sp = slot_pos[:, None, :]                         # (b, 1, S)
+    qp = q_positions[:, :, None]                      # (b, sq, 1)
+    ok = (sp >= 0) & (sp <= qp)                       # (b, sq, S)
+    if window is not None:
+        ok &= sp > qp - window
+    s = jnp.where(ok[:, None, None, :, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      slot_pos: jax.Array, pos: jax.Array, *,
                      window: Optional[int] = None,
                      softcap: Optional[float] = None,
                      scale: Optional[float] = None) -> jax.Array:
-    """One-token attention against a cache.
+    """One-token attention against a cache (sq=1 :func:`cache_attention`).
 
-    q: (b, 1, hq, d); k_cache/v_cache: (b, S, hkv, d);
-    slot_pos: (b, S) int32 — absolute position held by each slot, -1 empty;
-    pos: (b,) per-row current position (continuous batching: rows advance
-    independently).  Ring buffers just wrap slot_pos.
+    q: (b, 1, hq, d); pos: (b,) per-row current position (continuous
+    batching: rows advance independently).  Ring buffers wrap slot_pos.
     """
-    b, _, hq, d = q.shape
-    hkv = k_cache.shape[2]
-    scale = scale if scale is not None else 1.0 / math.sqrt(d)
-    qg = _group(q, hkv)
-    s = _scores(qg, k_cache, scale, softcap)          # (b,h,g,1,S)
-    pos_b = pos[:, None]
-    ok = (slot_pos >= 0) & (slot_pos <= pos_b)
-    if window is not None:
-        ok &= slot_pos > pos_b - window
-    s = jnp.where(ok[:, None, None, None, :], s, _NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
-                   preferred_element_type=jnp.float32)
-    return o.reshape(b, 1, hq, d).astype(q.dtype)
+    return cache_attention(q, k_cache, v_cache, slot_pos, pos[:, None],
+                           window=window, softcap=softcap, scale=scale)
 
 
 # --------------------------------------------------------------------- #
@@ -357,31 +377,91 @@ def cache_kv(cache: dict, kv_format: Optional[str], head_dim: int,
     return k, v
 
 
+def mask_rows(mask: Optional[jax.Array], new: jax.Array,
+                old: jax.Array) -> jax.Array:
+    """Select ``new`` where ``mask`` (leading-dims bool) else ``old``."""
+    if mask is None:
+        return new
+    m = mask.reshape(mask.shape + (1,) * (new.ndim - mask.ndim))
+    return jnp.where(m, new, old)
+
+
 def cache_write_decode(cache: dict, k: jax.Array, v: jax.Array,
                        pos: jax.Array,
-                       kv_format: Optional[str] = None) -> dict:
+                       kv_format: Optional[str] = None,
+                       active: Optional[jax.Array] = None) -> dict:
     """Write one (b, 1, hkv, d) k/v at per-row slot ``pos % capacity``.
 
     pos: (b,) — rows may sit at different positions (continuous batching),
     so the write is a per-row scatter (one distinct slot per row).
-    Quantized caches encode on the way in (trace-safe)."""
+    Quantized caches encode on the way in (trace-safe).
+
+    active: optional (b,) bool — rows where False keep their previous
+    slot contents and ``slot_pos`` untouched (inactive pool slots inside
+    the fused decode loop must not write; their incoming k/v is garbage
+    from a held-constant last_token)."""
     sp_arr = cache["slot_pos"]
     b, cap = sp_arr.shape
     slot = (pos % cap).astype(jnp.int32)
     rows = jnp.arange(b)
-    sp = sp_arr.at[rows, slot].set(pos.astype(jnp.int32))
+    sp = sp_arr.at[rows, slot].set(
+        mask_rows(active, pos.astype(jnp.int32), sp_arr[rows, slot]))
+
+    def put(pool, new):
+        return pool.at[rows, slot].set(
+            mask_rows(active, new, pool[rows, slot]))
+
     if is_quantized_cache(cache):
         assert kv_format is not None, "quantized cache needs its kv_format"
         k_q, k_s = quantize_kv(k[:, 0], kv_format)
         v_q, v_s = quantize_kv(v[:, 0], kv_format)
-        return {"k_q": cache["k_q"].at[rows, slot].set(k_q),
-                "k_s": cache["k_s"].at[rows, slot].set(k_s),
-                "v_q": cache["v_q"].at[rows, slot].set(v_q),
-                "v_s": cache["v_s"].at[rows, slot].set(v_s),
+        return {"k_q": put(cache["k_q"], k_q), "k_s": put(cache["k_s"], k_s),
+                "v_q": put(cache["v_q"], v_q), "v_s": put(cache["v_s"], v_s),
                 "slot_pos": sp}
-    k_new = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
-    v_new = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
-    return {"k": k_new, "v": v_new, "slot_pos": sp}
+    return {"k": put(cache["k"], k[:, 0].astype(cache["k"].dtype)),
+            "v": put(cache["v"], v[:, 0].astype(cache["v"].dtype)),
+            "slot_pos": sp}
+
+
+def cache_write_chunk(cache: dict, k: jax.Array, v: jax.Array,
+                      positions: jax.Array,
+                      valid: Optional[jax.Array] = None,
+                      kv_format: Optional[str] = None) -> dict:
+    """Bulk-write a prompt *chunk* (b, s, hkv, d) at absolute
+    ``positions`` (s,) into the (ring) cache — the chunked-prefill write.
+
+    Unlike :func:`cache_write_prefill` this does not assume the cache
+    starts empty or that positions begin at 0: ``positions`` may start at
+    any offset (traced — one compiled executable serves every chunk of
+    every prompt) and earlier cache contents outside the chunk survive.
+    ``valid`` masks the padded tail of the last chunk (masked positions
+    keep their previous contents and slot_pos).  Positions must map to
+    distinct ring slots, i.e. s <= capacity (the engine clamps its chunk
+    size to the smallest layer capacity).  Quantized caches encode on
+    the way in — quantize-on-write, inside the jitted chunk step.
+    """
+    cap = cache["slot_pos"].shape[1]
+    b, s = k.shape[0], k.shape[1]
+    slots = (positions % cap).astype(jnp.int32)
+    sp_new = jnp.broadcast_to(positions.astype(jnp.int32), (b, s))
+    vmask = None if valid is None else jnp.broadcast_to(valid, (b, s))
+    sp = cache["slot_pos"].at[:, slots].set(
+        mask_rows(vmask, sp_new, cache["slot_pos"][:, slots]))
+
+    def put(pool, new):
+        return pool.at[:, slots].set(
+            mask_rows(vmask, new, pool[:, slots]))
+
+    if is_quantized_cache(cache):
+        assert kv_format is not None, "quantized cache needs its kv_format"
+        k_q, k_s = quantize_kv(k, kv_format)
+        v_q, v_s = quantize_kv(v, kv_format)
+        return {"k_q": put(cache["k_q"], k_q), "k_s": put(cache["k_s"], k_s),
+                "v_q": put(cache["v_q"], v_q), "v_s": put(cache["v_s"], v_s),
+                "slot_pos": sp}
+    return {"k": put(cache["k"], k.astype(cache["k"].dtype)),
+            "v": put(cache["v"], v.astype(cache["v"].dtype)),
+            "slot_pos": sp}
 
 
 def cache_write_prefill(cache: dict, k: jax.Array, v: jax.Array,

@@ -16,8 +16,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models.transformer import (
-    VLM_PATCHES, init_cache, init_lm, kv_cache_stats, lm_decode_step,
-    lm_features, lm_forward, lm_prefill, unembed_weight)
+    VLM_PATCHES, clear_slot, init_cache, init_lm, kv_cache_stats,
+    lm_decode_step, lm_features, lm_forward, lm_prefill, lm_prefill_chunk,
+    min_cache_capacity, supports_chunked_prefill, unembed_weight)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,8 +44,26 @@ class Model:
         return lm_prefill(params, batch, self.cfg, max_seq)
 
     def decode_step(self, params: dict, cache: dict, token: jax.Array,
-                    pos: jax.Array):
-        return lm_decode_step(params, cache, token, pos, self.cfg)
+                    pos: jax.Array, active: Optional[jax.Array] = None):
+        return lm_decode_step(params, cache, token, pos, self.cfg,
+                              active=active)
+
+    # -- serving hot-path API (fused loop / chunked pooled prefill) --- #
+    def prefill_chunk(self, params: dict, cache: dict, tokens: jax.Array,
+                      slot: jax.Array, pos_offset: jax.Array,
+                      valid_len: jax.Array):
+        return lm_prefill_chunk(params, cache, tokens, slot, pos_offset,
+                                valid_len, self.cfg)
+
+    def clear_slot(self, cache: dict, slot: jax.Array) -> dict:
+        return clear_slot(cache, slot)
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        return supports_chunked_prefill(self.cfg)
+
+    def min_cache_capacity(self, max_seq: int) -> int:
+        return min_cache_capacity(self.cfg, max_seq)
 
     def init_cache(self, batch: int, max_seq: int, enc_len: int = 0):
         return init_cache(self.cfg, batch, max_seq, enc_len)

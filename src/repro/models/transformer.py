@@ -414,12 +414,20 @@ def lm_prefill(params: dict, batch: Dict[str, jax.Array], cfg: ArchConfig,
 
 
 def lm_decode_step(params: dict, cache: dict, token: jax.Array,
-                   pos: jax.Array, cfg: ArchConfig
+                   pos: jax.Array, cfg: ArchConfig,
+                   active: Optional[jax.Array] = None
                    ) -> Tuple[jax.Array, dict]:
     """One decode step.  token: (b,) int32; pos: (b,) int32 per-row
     position of the *incoming* token (rows advance independently under
     continuous batching; pass a broadcast scalar for lockstep decode).
-    Returns (logits (b, vocab), updated cache)."""
+    Returns (logits (b, vocab), updated cache).
+
+    ``active`` (optional (b,) bool) masks *all* cache mutation — KV ring
+    writes, slot_pos bookkeeping, and SSM conv/state advancement — for
+    rows where it is False.  That is what makes this step scan-compatible
+    inside the fused multi-token decode loop: finished pool slots ride
+    along at zero state cost (their logits are computed but garbage, and
+    the caller masks their samples)."""
     from repro.models.layers import apply_rope
     pattern = cfg.block_pattern()
     x = embed(params["embed"], token[:, None])        # (b, 1, d)
@@ -444,7 +452,8 @@ def lm_decode_step(params: dict, cache: dict, token: jax.Array,
                 k = apply_rope(k, positions, cfg.rope_theta)
                 kv_fmt = cfg.kv_format or None
                 kv = attn.cache_write_decode(c["kv"], k, v, pos,
-                                             kv_format=kv_fmt)
+                                             kv_format=kv_fmt,
+                                             active=active)
                 kc, vc = attn.cache_kv(kv, kv_fmt, cfg.head_dim,
                                        out_dtype=x.dtype)
                 o = attn.decode_attention(
@@ -461,8 +470,13 @@ def lm_decode_step(params: dict, cache: dict, token: jax.Array,
                     entry["cross_kv"] = c["cross_kv"]
             elif blk.mixer == "ssm":
                 h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
-                out, entry["ssm"] = ssm_lib.ssm_decode(p["ssm"], h,
-                                                       c["ssm"], cfg)
+                out, new_ssm = ssm_lib.ssm_decode(p["ssm"], h,
+                                                  c["ssm"], cfg)
+                if active is not None:
+                    new_ssm = jax.tree.map(
+                        lambda n, o: attn.mask_rows(active, n, o),
+                        new_ssm, c["ssm"])
+                entry["ssm"] = new_ssm
                 x = x + out
             if blk.ffn == "dense":
                 h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
@@ -484,3 +498,147 @@ def lm_decode_step(params: dict, cache: dict, token: jax.Array,
     w_out = params["embed"].T if cfg.tie_embeddings else params["unembed"]
     logits = unembed(w_out, x, softcap=cfg.final_logit_softcap)[:, 0]
     return logits, out_cache
+
+
+# --------------------------------------------------------------------- #
+# Chunked pooled prefill (serving admission without host scatter)
+# --------------------------------------------------------------------- #
+
+def supports_chunked_prefill(cfg: ArchConfig) -> bool:
+    """Chunked pooled prefill covers plain decoder LMs: every mixer is
+    attention (an SSM recurrence would need its state threaded through
+    chunk boundaries), no cross-attention, no modality frontend.  Other
+    families fall back to the width-1 prefill + slot scatter."""
+    return (not cfg.is_encoder_decoder and cfg.frontend is None
+            and all(b.mixer == "attn" and not b.cross_attn
+                    for b in cfg.block_pattern()))
+
+
+def min_cache_capacity(cfg: ArchConfig, max_seq: int) -> int:
+    """Smallest per-layer ring capacity (local windows shrink it) — the
+    upper bound on a prefill chunk (chunk slots must be distinct)."""
+    caps = [attn.cache_capacity(max_seq, b.window)
+            for b in cfg.block_pattern() if b.mixer == "attn"]
+    return min(caps) if caps else max_seq
+
+
+def clear_slot(cache: dict, slot: jax.Array) -> dict:
+    """Evict pool row ``slot``: mark every layer's ring entries empty
+    (slot_pos = -1) and zero recurrent/cross state.  K/V payloads stay —
+    slot_pos masking makes them unreachable — so this is O(capacity)
+    bookkeeping, not an O(cache) rewrite.  Runs jitted with ``slot``
+    traced (one executable serves every slot)."""
+    out: dict = {}
+    for name, entry in cache.items():
+        if name == "enc_out":
+            out[name] = entry.at[slot].set(
+                jnp.zeros_like(entry[0]))
+            continue
+        e: dict = {}
+        for part, tree in entry.items():
+            if part == "kv":
+                e[part] = dict(
+                    tree, slot_pos=tree["slot_pos"].at[:, slot].set(-1))
+            else:
+                # ssm conv/state and cross_kv are positional arrays with
+                # no ring bookkeeping (no slot_pos leaf) — zeroing the
+                # row IS their empty state
+                e[part] = jax.tree.map(
+                    lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, 0])),
+                    tree)
+        out[name] = e
+    return out
+
+
+def lm_prefill_chunk(params: dict, cache: dict, tokens: jax.Array,
+                     slot: jax.Array, pos_offset: jax.Array,
+                     valid_len: jax.Array, cfg: ArchConfig
+                     ) -> Tuple[jax.Array, dict]:
+    """Prefill one prompt *chunk* for pool row ``slot`` directly into the
+    shared serving cache — the chunked pooled-prefill step.
+
+    tokens: (chunk,) int32, zero-padded past ``valid_len``;
+    pos_offset: scalar int32 absolute position of tokens[0];
+    valid_len: scalar int32 number of real tokens in this chunk.
+    All three are traced, so ceil(prompt/chunk) dispatches of ONE
+    compiled executable admit any prompt — no host-side cache pytree
+    rematerialization, no recompilation per prompt length.
+
+    Each attention layer writes the chunk's K/V (quantize-on-write for
+    ``cfg.kv_format`` caches) into the slot's ring region first, then
+    attends the chunk queries against the full ring row — position
+    masking (``slot_pos <= q_pos``) gives intra-chunk causality and
+    cross-chunk history in one mask.  Returns (logits (1, vocab) at the
+    last valid position, updated cache).
+    """
+    from repro.models.layers import apply_rope
+    if not supports_chunked_prefill(cfg):
+        raise NotImplementedError(
+            f"{cfg.name}: chunked prefill needs an attention-only decoder "
+            f"(SSM/cross-attn/frontend archs use lm_prefill + scatter)")
+    pattern = cfg.block_pattern()
+    s = tokens.shape[0]
+    x = embed(params["embed"], tokens[None, :])       # (1, s, d)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    positions = pos_offset + jnp.arange(s, dtype=jnp.int32)   # (s,)
+    valid = jnp.arange(s) < valid_len
+    kv_fmt = cfg.kv_format or None
+
+    def period_fn(x, scanned):
+        period_params, period_cache = scanned
+        new_cache = {}
+        for i, blk in enumerate(pattern):
+            p = period_params[f"pos{i}"]
+            c = period_cache[f"pos{i}"]
+            h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
+            q = attn.project_q(p["attn"], h)
+            k, v = attn.project_kv(p["attn"], h)
+            q = apply_rope(q, positions[None, :], cfg.rope_theta)
+            k = apply_rope(k, positions[None, :], cfg.rope_theta)
+            kv_row = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, 0),
+                c["kv"])
+            # Attend against the PRE-write history concatenated with the
+            # chunk's own raw K/V.  Writing first and attending over the
+            # ring would be wrong once a chunk wraps a sliding-window
+            # ring (capacity == window): the chunk's later writes evict
+            # positions still inside its earlier queries' windows.  The
+            # concat view keeps every position the full-prefill oracle
+            # sees — history from the cache, intra-chunk causality via
+            # the position mask — and matches lm_prefill in using the
+            # chunk's unquantized K/V for its own queries.
+            kc, vc = attn.cache_kv(kv_row, kv_fmt, cfg.head_dim,
+                                   out_dtype=x.dtype)
+            chunk_sp = jnp.where(valid, positions, -1)[None, :]
+            o = attn.cache_attention(
+                q,
+                jnp.concatenate([kc, k.astype(kc.dtype)], axis=1),
+                jnp.concatenate([vc, v.astype(vc.dtype)], axis=1),
+                jnp.concatenate([kv_row["slot_pos"], chunk_sp], axis=1),
+                positions[None, :], window=blk.window,
+                softcap=cfg.attn_logit_softcap)
+            x = x + attn.project_out(p["attn"], o)
+            kv_row = attn.cache_write_chunk(kv_row, k, v, positions,
+                                            valid, kv_format=kv_fmt)
+            entry = {"kv": jax.tree.map(
+                lambda pool, row: jax.lax.dynamic_update_slice_in_dim(
+                    pool, row, slot, 0),
+                c["kv"], kv_row)}
+            if blk.ffn == "dense":
+                h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+                x = x + apply_mlp(p["mlp"], h, cfg.mlp_variant)
+            elif blk.ffn == "moe":
+                h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+                y, _ = moe_lib.apply_moe(p["moe"], h, cfg)
+                x = x + y
+            new_cache[f"pos{i}"] = entry
+        return x, new_cache
+
+    layer_cache = {k: v for k, v in cache.items() if k.startswith("pos")}
+    x, new_layer_cache = jax.lax.scan(
+        period_fn, x, (params["layers"], layer_cache))
+    x_last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+    x_last = rms_norm(params["final_norm"], x_last, cfg.norm_eps)
+    w_out = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(w_out, x_last, softcap=cfg.final_logit_softcap)[:, 0]
+    return logits, dict(new_layer_cache)

@@ -1,6 +1,10 @@
 """Serving stack: samplers, quantization, batched engine."""
 
-from repro.serve.sampler import sample_token  # noqa: F401
+from repro.serve.sampler import (  # noqa: F401
+    fold_slot_keys,
+    sample_token,
+    sample_tokens,
+)
 from repro.serve.quant import (  # noqa: F401
     LOW_PRECISION_FORMATS,
     dequantize_blockwise,

@@ -1,16 +1,38 @@
-"""Batched serving engine with continuous batching.
+"""Batched serving engine: device-resident hot loop with continuous
+batching.
 
-A fixed pool of ``batch`` slots shares one cache pytree; finished or empty
-slots are refilled from a request queue between decode steps (prefill for
-a new request writes that slot's cache region).  The decode step itself is
-a single jitted call over the whole pool — the batching model TPU serving
-actually uses (decode is memory-bound; batching amortizes the weight
-reads, which is exactly the paper's §VI.D read-bandwidth story).
+A fixed pool of ``batch`` slots shares one cache pytree.  The paper's
+first discipline is to characterize measurement and dispatch overhead
+before trusting any number (§IV.A/§IV.B), and its §VI.D story is that
+decode is memory-bound — batching exists to amortize reads.  A serving
+loop that pays a host↔device round trip per generated token therefore
+measures *dispatch latency*, not the HBM roofline this repo models.  So
+the hot path is device-resident:
 
-For simplicity prefill here runs per-request at pool width 1 and its cache
-is scattered into the slot; a production engine would chunk prefill into
-the decode schedule, which does not change the lowered decode step the
-dry-run measures.
+* **On-device slot state** — ``pos`` / ``remaining`` / ``last_token`` /
+  ``active`` / per-request RNG ``seed`` live in device arrays (the
+  ``state`` pytree), not host-side Python bookkeeping.
+* **Fused multi-token decode** — :meth:`decode_loop` runs K decode
+  steps in ONE dispatch: a jitted ``lax.scan`` whose body fuses
+  decode → sample → (quantized) cache-write → slot bookkeeping.
+  Inactive slots are masked end to end: they neither sample nor write
+  (KV ring, slot_pos, and SSM state all hold), so a slot finishing
+  mid-loop rides along at zero state cost.  Host code touches tokens
+  once per K steps instead of once per token.
+* **Chunked pooled prefill** — admission writes prompt chunks directly
+  into the slot's pool region inside a jitted step (quantize-on-write
+  for ``kv_format`` caches): ceil(prompt/chunk) dispatches of one
+  compiled executable, with no host-side rematerialization of the
+  whole cache pytree.  Architectures whose mixers carry recurrent
+  state across chunk boundaries (SSM/hybrid, enc-dec, VLM) fall back
+  to the width-1 prefill + slot scatter.
+
+Sampling inside the loop folds per-slot keys from (request id,
+position) — see ``serve.sampler.sample_tokens`` — so token streams are
+deterministic per request regardless of batch composition, pool slot,
+or whether they came from the fused loop or per-step dispatches.  That
+is what makes the fused-vs-per-step equivalence testable for sampled
+decoding, not just greedy.
 
 Weight storage: with ``weight_format`` set, the engine keeps its weights
 in true quantized storage (``serve.quant.quantize_tree`` — bit-packed
@@ -23,21 +45,17 @@ KV storage: with ``kv_format`` set, the pooled decode cache itself is
 blockwise-quantized (``repro.models.attention``: packed fp8/fp4 codes +
 1-byte e8m0 scales, quantize-on-write inside the jitted step) — at long
 context the KV read, not the weights, dominates decode HBM traffic
-(§VI.D), so this is the lever that actually moves the roofline.
-``kv_stats`` carries the measured stored KV bytes (per token and per
-element) next to the weight numbers.  Note the XLA decode step
-materializes a dense dequantized view of the cache per layer (like the
-weight path, XLA consumes dense arrays), so off-TPU the win is
-*footprint*, not step time; the streaming read win belongs to the
-Pallas leg (``repro.kernels.flash_decode_quant``, validated against
-this path's oracle in interpret mode — the same kernel-vs-XLA-twin
-split as flash_decode/decode_attention).
+(§VI.D).  ``kv_stats`` carries the measured stored KV bytes.  The XLA
+decode step materializes a dense dequantized view per layer, so off-TPU
+the win is *footprint*; the streaming read win belongs to the Pallas
+leg (``repro.kernels.flash_decode_quant``).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +63,7 @@ import numpy as np
 
 from repro.models.model import Model, build_model
 from repro.serve.quant import dequantize_tree, quantize_tree
-from repro.serve.sampler import sample_token
+from repro.serve.sampler import sample_tokens
 
 
 @dataclasses.dataclass
@@ -53,6 +71,7 @@ class GenerationResult:
     request_id: int
     prompt: List[int]
     tokens: List[int]
+    truncated: bool = False       # run() step budget hit mid-generation
 
 
 @dataclasses.dataclass
@@ -63,11 +82,17 @@ class _Request:
 
 
 class ServeEngine:
+    """See module docstring.  ``decode_block`` is K, the number of decode
+    steps fused into one dispatch by :meth:`run` (1 = the per-token
+    dispatch pattern, kept as the measurable baseline — that leg is what
+    ``benchmarks/serve_throughput.py`` compares against)."""
+
     def __init__(self, model: Model, params, batch: int, max_seq: int,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  weight_format: Optional[str] = None, packed: bool = True,
                  kv_format: Optional[str] = None,
-                 compute_dtype=jnp.bfloat16):
+                 compute_dtype=jnp.bfloat16,
+                 decode_block: int = 16, prefill_chunk: int = 32):
         if kv_format:
             # rebind the model onto a config whose cache layer quantizes:
             # every prefill/decode below then writes packed codes +
@@ -85,26 +110,72 @@ class ServeEngine:
         self.params = params
         self.batch = batch
         self.max_seq = max_seq
-        self.temperature = temperature
-        self.top_k = top_k
-        self.key = jax.random.PRNGKey(seed)
+        self._temperature = temperature
+        self._top_k = top_k
+        self.decode_block = max(int(decode_block), 1)
+        self._chunked = model.supports_chunked_prefill
+        self.prefill_chunk = max(
+            1, min(int(prefill_chunk), model.min_cache_capacity(max_seq)))
+        # base sampling key; per-token keys are FOLDED from (request id,
+        # position) inside the jitted loop — never split on the host
+        self._sample_key = jax.random.PRNGKey(seed)
 
         self.cache = model.init_cache(batch, max_seq)
         # measured KV storage accounting (codes + scales, what a decode
         # step actually reads) — reported by Tab VIII next to weights
         self.kv_stats: Dict = model.kv_cache_stats(self.cache)
-        self.pos = np.zeros(batch, np.int64)          # next position per slot
-        self.remaining = np.zeros(batch, np.int64)
-        self.active: List[Optional[_Request]] = [None] * batch
+
+        # host-side request bookkeeping (no per-token state here)
+        self.slot_req: List[Optional[_Request]] = [None] * batch
         self.out_tokens: List[List[int]] = [[] for _ in range(batch)]
-        self.last_token = np.zeros(batch, np.int32)
-        self.queue: List[_Request] = []
+        self.queue: Deque[_Request] = collections.deque()
         self.results: List[GenerationResult] = []
         self._next_id = 0
 
-        self._decode = jax.jit(model.decode_step)
+        # device-resident slot state
+        self.state = self._init_state()
+
+        # jitted executables (shared across reset(); decode loops are
+        # cached per fused length K)
+        self._loops: Dict[int, jax.stages.Wrapped] = {}
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_seq))
+        self._prefill_chunk_fn = jax.jit(model.prefill_chunk)
+        self._clear_slot_fn = jax.jit(model.clear_slot)
+        self._admit_fn = jax.jit(self._admit_update)
+
+    # sampling params are traced INTO the compiled loop/admit
+    # executables — mutating them after construction would be silently
+    # ignored by the cached jits, so they are read-only (build a new
+    # engine to change them)
+    @property
+    def temperature(self) -> float:
+        return self._temperature
+
+    @property
+    def top_k(self) -> int:
+        return self._top_k
+
+    # -- device state --------------------------------------------------- #
+    def _init_state(self) -> Dict[str, jax.Array]:
+        b = self.batch
+        return {"pos": jnp.zeros((b,), jnp.int32),
+                "remaining": jnp.zeros((b,), jnp.int32),
+                "last_token": jnp.zeros((b,), jnp.int32),
+                "active": jnp.zeros((b,), bool),
+                "seed": jnp.zeros((b,), jnp.int32)}
+
+    def reset(self) -> None:
+        """Clear all serving state (cache, slots, queue, results) while
+        keeping compiled executables — benchmark legs reuse one engine so
+        recompilation never pollutes a timed region."""
+        self.cache = self.model.init_cache(self.batch, self.max_seq)
+        self.state = self._init_state()
+        self.slot_req = [None] * self.batch
+        self.out_tokens = [[] for _ in range(self.batch)]
+        self.queue = collections.deque()
+        self.results = []
+        self._next_id = 0
 
     # -- request management -------------------------------------------- #
     def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
@@ -122,24 +193,63 @@ class ServeEngine:
         self.queue.append(_Request(rid, list(prompt), max_new_tokens))
         return rid
 
+    def _admit_update(self, state, logits, slot, plen, max_new, rid, key):
+        """Jitted per-admission state write: sample the first token from
+        the prefill logits (same (rid, pos) key fold as the loop) and set
+        the slot's device state.  One dispatch per admission."""
+        tok = sample_tokens(logits, key, self.temperature, self.top_k,
+                            slot_seed=rid[None], pos=plen[None])[0]
+        active = max_new > 1
+        return tok, {
+            "pos": state["pos"].at[slot].set(plen),
+            "remaining": state["remaining"].at[slot].set(max_new - 1),
+            "last_token": state["last_token"].at[slot].set(tok),
+            "active": state["active"].at[slot].set(active),
+            "seed": state["seed"].at[slot].set(rid),
+        }
+
+    def _prefill_into_slot(self, slot: int, req: _Request) -> jax.Array:
+        """Build the slot's cache region; returns last-prompt-position
+        logits (1, vocab)."""
+        if self._chunked:
+            # evict the previous tenant's ring bookkeeping, then stream
+            # prompt chunks straight into the pool region (jitted;
+            # quantize-on-write for kv_format caches)
+            self.cache = self._clear_slot_fn(self.cache, jnp.int32(slot))
+            chunk, plen = self.prefill_chunk, len(req.prompt)
+            logits = None
+            for off in range(0, plen, chunk):
+                part = req.prompt[off:off + chunk]
+                valid = len(part)
+                part = part + [0] * (chunk - valid)
+                logits, self.cache = self._prefill_chunk_fn(
+                    self.params, self.cache,
+                    jnp.asarray(part, jnp.int32), jnp.int32(slot),
+                    jnp.int32(off), jnp.int32(valid))
+            return logits
+        # fallback (SSM/hybrid, enc-dec, VLM): width-1 prefill whose
+        # cache is scattered into the slot
+        tokens = jnp.asarray([req.prompt], jnp.int32)
+        logits, cache1 = self._prefill(self.params, {"tokens": tokens})
+        self.cache = jax.tree.map(
+            lambda pool, one: self._scatter_slot(pool, one, slot),
+            self.cache, cache1)
+        return logits
+
     def _admit(self) -> None:
         for slot in range(self.batch):
-            if self.active[slot] is not None or not self.queue:
+            if self.slot_req[slot] is not None or not self.queue:
                 continue
-            req = self.queue.pop(0)
-            tokens = jnp.asarray([req.prompt], jnp.int32)
-            logits, cache1 = self._prefill(self.params, {"tokens": tokens})
-            # scatter the single-row prefill cache into this slot
-            self.cache = jax.tree.map(
-                lambda pool, one: self._scatter_slot(pool, one, slot),
-                self.cache, cache1)
-            self.key, sub = jax.random.split(self.key)
-            tok = sample_token(logits, sub, self.temperature, self.top_k)
-            self.active[slot] = req
-            self.out_tokens[slot] = [int(tok[0])]
-            self.last_token[slot] = int(tok[0])
-            self.pos[slot] = len(req.prompt)
-            self.remaining[slot] = req.max_new_tokens - 1
+            req = self.queue.popleft()
+            logits = self._prefill_into_slot(slot, req)
+            tok, self.state = self._admit_fn(
+                self.state, logits, jnp.int32(slot),
+                jnp.int32(len(req.prompt)), jnp.int32(req.max_new_tokens),
+                jnp.int32(req.request_id), self._sample_key)
+            self.slot_req[slot] = req
+            self.out_tokens[slot] = [int(tok)]
+            if req.max_new_tokens <= 1:
+                self._finish(slot)
 
     @staticmethod
     def _scatter_slot(pool: jax.Array, one: jax.Array, slot: int):
@@ -154,35 +264,121 @@ class ServeEngine:
             return one
         return jax.lax.dynamic_update_slice_in_dim(pool, one, slot, axis)
 
-    # -- decode --------------------------------------------------------- #
-    def step(self) -> None:
-        """One pooled decode step (slots advance together)."""
-        self._admit()
-        if not any(r is not None for r in self.active):
-            return
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.last_token),
-            jnp.asarray(self.pos, jnp.int32))
-        self.key, sub = jax.random.split(self.key)
-        toks = np.asarray(sample_token(logits, sub, self.temperature,
-                                       self.top_k))
-        for slot in range(self.batch):
-            req = self.active[slot]
-            if req is None:
-                continue
-            self.out_tokens[slot].append(int(toks[slot]))
-            self.last_token[slot] = int(toks[slot])
-            self.pos[slot] += 1
-            self.remaining[slot] -= 1
-            if self.remaining[slot] <= 0 or self.pos[slot] >= self.max_seq - 1:
-                self.results.append(GenerationResult(
-                    req.request_id, req.prompt, self.out_tokens[slot]))
-                self.active[slot] = None
+    # -- fused decode --------------------------------------------------- #
+    def _make_decode_loop(self, k: int):
+        """Jit the K-step fused loop: decode → sample → cache-write →
+        bookkeeping inside one ``lax.scan``, emitting (tokens (k, b),
+        emitted-mask (k, b)) plus the advanced cache/state."""
+        model = self.model
+        temp, top_k, max_seq = self.temperature, self.top_k, self.max_seq
 
+        def loop(params, cache, state, key):
+            def body(carry, _):
+                cache, st = carry
+                active = st["active"]
+                logits, cache = model.decode_step(
+                    params, cache, st["last_token"], st["pos"],
+                    active=active)
+                nxt = st["pos"] + 1
+                tok = sample_tokens(logits, key, temp, top_k,
+                                    slot_seed=st["seed"], pos=nxt)
+                tok = jnp.where(active, tok, st["last_token"])
+                new_pos = jnp.where(active, nxt, st["pos"])
+                new_rem = st["remaining"] - active.astype(jnp.int32)
+                finished = active & ((new_rem <= 0)
+                                     | (new_pos >= max_seq - 1))
+                st = {"pos": new_pos, "remaining": new_rem,
+                      "last_token": tok, "active": active & ~finished,
+                      "seed": st["seed"]}
+                return (cache, st), (tok, active)
+
+            (cache, state), (toks, emitted) = jax.lax.scan(
+                body, (cache, state), xs=None, length=k)
+            return cache, state, toks, emitted
+
+        return jax.jit(loop)
+
+    def _any_active(self) -> bool:
+        return any(r is not None for r in self.slot_req)
+
+    def _max_remaining(self) -> int:
+        """Largest token budget left among in-flight slots (host-known:
+        max_new_tokens minus tokens already emitted).  run() caps the
+        fused block with this so the tail dispatch runs exactly the
+        iterations it needs — without it, finishing a 23-token request
+        with K=16 blocks would burn 9 fully-masked (but fully-costed)
+        scan iterations."""
+        rem = 0
+        for slot, req in enumerate(self.slot_req):
+            if req is not None:
+                rem = max(rem,
+                          req.max_new_tokens - len(self.out_tokens[slot]))
+        return max(rem, 1)
+
+    def _finish(self, slot: int, truncated: bool = False) -> None:
+        req = self.slot_req[slot]
+        self.results.append(GenerationResult(
+            req.request_id, req.prompt, self.out_tokens[slot],
+            truncated=truncated))
+        self.slot_req[slot] = None
+
+    def _dispatch(self, k: int) -> None:
+        """One fused dispatch of K decode steps + one host sync for its
+        K×batch tokens."""
+        fn = self._loops.get(k)
+        if fn is None:
+            fn = self._loops[k] = self._make_decode_loop(k)
+        self.cache, self.state, toks, emitted = fn(
+            self.params, self.cache, self.state, self._sample_key)
+        toks = np.asarray(toks)                       # (k, b) — ONE sync
+        emitted = np.asarray(emitted)
+        active_after = np.asarray(self.state["active"])
+        for slot in range(self.batch):
+            if self.slot_req[slot] is None:
+                continue
+            self.out_tokens[slot].extend(
+                int(t) for t, e in zip(toks[:, slot], emitted[:, slot])
+                if e)
+            if not active_after[slot]:
+                self._finish(slot)
+
+    def decode_loop(self, k: Optional[int] = None) -> None:
+        """Admit from the queue, then run K fused decode steps in one
+        dispatch (K = ``decode_block`` by default)."""
+        self._admit()
+        if self._any_active():
+            self._dispatch(k or self.decode_block)
+
+    def step(self) -> None:
+        """One pooled decode step — the per-token dispatch pattern (one
+        launch + one host sync per generated token).  Kept as the
+        measurable baseline; :meth:`run` uses the fused loop."""
+        self.decode_loop(1)
+
+    # -- driver --------------------------------------------------------- #
     def run(self, max_steps: int = 1000) -> List[GenerationResult]:
+        """Serve until queue and pool drain or ``max_steps`` decode steps
+        have been spent.  On budget exhaustion, in-flight requests are
+        FLUSHED as partial results (``truncated=True``) instead of being
+        silently dropped."""
         steps = 0
-        while (self.queue or any(r is not None for r in self.active)) \
-                and steps < max_steps:
-            self.step()
-            steps += 1
+        while steps < max_steps:
+            self._admit()
+            if not self._any_active():
+                if not self.queue:
+                    break
+                continue
+            k = min(self.decode_block, max_steps - steps,
+                    self._max_remaining())
+            self._dispatch(k)
+            steps += k
+        if self._any_active():
+            # budget hit mid-generation: flush partials and deactivate
+            # their device slots so a later run() cannot advance them
+            for slot in range(self.batch):
+                if self.slot_req[slot] is not None:
+                    self._finish(slot, truncated=True)
+            self.state = dict(
+                self.state,
+                active=jnp.zeros_like(self.state["active"]))
         return sorted(self.results, key=lambda r: r.request_id)

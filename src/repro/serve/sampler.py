@@ -1,4 +1,19 @@
-"""Token samplers (fp32 logits in, int32 token out)."""
+"""Token samplers (fp32 logits in, int32 token out).
+
+Two entry points:
+
+* :func:`sample_token` — host-driven sampling with one key per call (the
+  original per-step engine path, kept for API stability and tests).
+* :func:`sample_tokens` — trace-safe batched sampling for the fused
+  decode loop.  Instead of splitting a host-held key per step (a device
+  round trip per token), each row's key is **folded** from a base key
+  plus per-slot data (``slot_seed``, ``pos``).  The fold makes sampling
+  deterministic per (engine seed, request, position) — independent of
+  batch composition, of which pool slot the request landed in, and of
+  whether tokens were produced by the fused K-token loop or K single
+  steps.  That last property is what lets the equivalence tests cover
+  the sampled path, not just greedy.
+"""
 
 from __future__ import annotations
 
@@ -6,6 +21,12 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+
+def _top_k_filter(logits: jax.Array, top_k: int) -> jax.Array:
+    vals, _ = jax.lax.top_k(logits, top_k)
+    cutoff = vals[..., -1:]
+    return jnp.where(logits < cutoff, -jnp.inf, logits)
 
 
 def sample_token(logits: jax.Array, key: Optional[jax.Array] = None,
@@ -16,7 +37,44 @@ def sample_token(logits: jax.Array, key: Optional[jax.Array] = None,
     assert key is not None, "sampling needs a PRNG key"
     logits = logits / temperature
     if top_k > 0:
-        vals, _ = jax.lax.top_k(logits, top_k)
-        cutoff = vals[..., -1:]
-        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+        logits = _top_k_filter(logits, top_k)
     return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def fold_slot_keys(key: jax.Array, slot_seed: jax.Array,
+                   pos: jax.Array) -> jax.Array:
+    """Per-row keys: ``fold_in(fold_in(key, slot_seed[i]), pos[i])``.
+
+    slot_seed: (b,) int32 per-request seed (the engine uses the request
+    id); pos: (b,) int32 position the sampled token will occupy.  Both
+    folds are trace-safe, so this runs inside the jitted decode loop.
+    """
+    def fold(seed, p):
+        return jax.random.fold_in(jax.random.fold_in(key, seed), p)
+    return jax.vmap(fold)(slot_seed.astype(jnp.int32),
+                          pos.astype(jnp.int32))
+
+
+def sample_tokens(logits: jax.Array, key: Optional[jax.Array] = None,
+                  temperature: float = 0.0, top_k: int = 0,
+                  slot_seed: Optional[jax.Array] = None,
+                  pos: Optional[jax.Array] = None) -> jax.Array:
+    """Batched in-loop sampling: logits (b, v) -> tokens (b,).
+
+    Greedy (temperature 0) needs no key.  Otherwise each row samples
+    under its own folded key (see :func:`fold_slot_keys`); when
+    ``slot_seed``/``pos`` are omitted it falls back to one shared key
+    (rows still sample independently via ``jax.random.categorical``).
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert key is not None, "sampling needs a PRNG key"
+    logits = logits / temperature
+    if top_k > 0:
+        logits = _top_k_filter(logits, top_k)
+    if slot_seed is None or pos is None:
+        return jax.random.categorical(key, logits).astype(jnp.int32)
+    keys = fold_slot_keys(key, slot_seed, pos)
+    return jax.vmap(
+        lambda k, l: jax.random.categorical(k, l))(keys, logits
+                                                   ).astype(jnp.int32)
