@@ -38,6 +38,7 @@ if __package__ in (None, ""):      # `python benchmarks/serve_throughput.py`
 
 from benchmarks.common import BenchResult, csv, table
 from repro import compat
+from repro.analysis.sanitize import CompileCounter
 from repro.configs import get_config
 from repro.core.timing import time_fn
 from repro.models import build_model
@@ -77,8 +78,19 @@ def measure(quick: bool = False, kv_format: Optional[str] = None,
         n_tok = _drive(eng, n_req, prompt_len, new_tokens)
         streams[name] = [r.tokens for r in
                          sorted(eng.results, key=lambda r: r.request_id)]
-        t = time_fn(_drive, eng, n_req, prompt_len, new_tokens,
-                    iters=iters, warmup=warmup)
+        # settle the device before the timed region, and hold the timed
+        # iterations to zero recompiles: the warm-up drive above already
+        # built every executable, so any compile inside time_fn means a
+        # shape/dtype leak is being timed as throughput
+        jax.block_until_ready((eng.cache, eng.state))
+        with CompileCounter() as compiles:
+            t = time_fn(_drive, eng, n_req, prompt_len, new_tokens,
+                        iters=iters, warmup=warmup)
+        if compiles.count:
+            raise AssertionError(
+                f"{name} leg recompiled {compiles.count}x inside the "
+                "timed region — measurement invalid (see README "
+                "'Static analysis & sanitizers')")
         legs[name] = {"decode_block": block, "tokens": n_tok,
                       "median_s": t.median_s, "mean_s": t.mean_s,
                       "std_s": t.std_s,

@@ -22,6 +22,7 @@ import time
 import jax
 
 from benchmarks.common import BenchResult, csv, table
+from repro.analysis.sanitize import CompileCounter
 from repro.configs import get_config
 from repro.core import TPU_V5E
 from repro.core.energy import estimate
@@ -67,9 +68,18 @@ def run(quick: bool = False) -> BenchResult:
         for i in range(n_req):
             eng.submit([1 + i, 2, 3, 4, 5, 6, 7, 8],
                        max_new_tokens=new_toks)
-        t0 = time.perf_counter()
-        results = eng.run()
-        dt = time.perf_counter() - t0
+        # settle async device work from the warm-up drive, then hold the
+        # timed region to zero recompiles (the warm-up compiled every
+        # executable; a compile here would be timed as tok/s)
+        jax.block_until_ready((eng.cache, eng.state))
+        with CompileCounter() as compiles:
+            t0 = time.perf_counter()
+            results = eng.run()
+            dt = time.perf_counter() - t0
+        if compiles.count:
+            raise AssertionError(
+                f"{fmt}: {compiles.count} recompile(s) inside the timed "
+                "region — tok/s invalid")
         toks = sum(len(r.tokens) for r in results)
         # v5e per-token energy: 2*N flops + measured HBM reads — the
         # quantized weight store (sum(arr.nbytes) over the actual packed

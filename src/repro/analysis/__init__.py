@@ -1,0 +1,45 @@
+"""Static analysis & runtime sanitizers for the microbenchmark harness.
+
+The source paper's methodology only works because its microbenchmarks are
+tightly controlled: a stray host sync, a silent recompile, or a dtype
+upcast and you are measuring the harness, not the hardware
+(arXiv:2605.04178 makes the same point for the measured-vs-predicted
+loop; arXiv:2402.13499 stresses hand-verified kernel contracts).  This
+package is the checker built from the bug classes this repo has actually
+shipped:
+
+* :mod:`repro.analysis.lint` — AST lint over ``src/`` and
+  ``benchmarks/``: host ops on tracers, Python control flow on traced
+  values, mutation of jit-captured attributes (the PR-4 ``temperature``
+  class), wall-clock/RNG in traced scope, memo caches keyed on mutable
+  registry state (the PR-3 ``_format_table`` class).
+* :mod:`repro.analysis.contracts` — jaxpr contract checking for the hot
+  entry points: packed fp4/fp6/e8m0 buffers are never widened before
+  their in-kernel expand, no host callbacks survive in hot paths,
+  quantize-on-write keeps cache leaves at storage width.
+* :mod:`repro.analysis.pallas_check` — static Pallas write-race /
+  aliasing / VMEM-footprint checker over every ``pallas_call`` in
+  ``repro.kernels``.
+* :mod:`repro.analysis.sanitize` — runtime sanitizers: compile counters,
+  host-sync counters, and a scripted serving scenario under
+  ``jax.transfer_guard`` proving each serving executable compiles
+  exactly once and the fused decode loop performs zero implicit host
+  transfers.
+
+CLI: ``python -m tools.jaxlint src benchmarks`` (the tier-1 CI gate).
+"""
+
+from repro.analysis.lint import (  # noqa: F401
+    Finding, LintConfig, RULES, lint_paths, lint_source, load_baseline,
+    write_baseline)
+from repro.analysis.pallas_check import (  # noqa: F401
+    PallasSite, check_kernels, check_sites, pallas_call_sites)
+from repro.analysis.sanitize import (  # noqa: F401
+    CompileCounter, SyncCounter, sanitize_serving)
+
+__all__ = [
+    "Finding", "LintConfig", "RULES", "lint_paths", "lint_source",
+    "load_baseline", "write_baseline",
+    "PallasSite", "check_kernels", "check_sites", "pallas_call_sites",
+    "CompileCounter", "SyncCounter", "sanitize_serving",
+]

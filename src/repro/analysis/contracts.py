@@ -1,0 +1,322 @@
+"""jaxpr contract checks for the hot entry points (layer 2).
+
+The Tab IV/V/VII/VIII artifacts all rest on one claim: a packed
+fp4/fp6/e8m0 buffer is streamed from HBM at its *stored* width and only
+expanded on the VMEM tile (or in the jnp twin's bitwise unpack).  One
+stray ``convert_element_type`` on the packed payload before that expand
+— an `.astype(f32)` slipped into a wrapper, an implicit promotion — and
+every bytes/elem number the repo reports is silently measuring dense
+traffic.  That is invisible to tests (values stay bit-exact) and
+invisible at runtime (nothing crashes); it is only visible in the
+jaxpr.  So we check the jaxpr.
+
+``CT301 packed-upcast``    float ``convert_element_type`` applied to a
+                           still-packed payload buffer.  Taint starts on
+                           the uint8 code leaves (``k_q``/``v_q``/packed
+                           weights — *not* the e8m0 scale leaves, whose
+                           direct ``astype(f32)`` in ``e8m0_decode`` is
+                           the legitimate decode), flows through layout
+                           ops and integer converts, and is *consumed*
+                           by bitwise ops (the unpack has begun) or by
+                           entering a ``pallas_call`` (the in-kernel
+                           expand).
+``CT302 host-callback``    ``pure_callback``/``io_callback``/
+                           ``debug_callback``/``debug_print`` surviving
+                           in a hot path: each is a host round trip per
+                           dispatch.
+``CT303 cache-width``      a quantized-cache entry point whose output
+                           cache leaves widen beyond their uint8
+                           storage (checked via ``jax.eval_shape``).
+
+:func:`check_entry_points` wires these to the serving hot paths named
+in the ROADMAP: ``lm_decode_step``, the fused ``decode_loop`` scan
+body, ``lm_prefill_chunk``, ``qmatmul_packed``, ``flash_decode_quant``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.lint import Finding
+
+# taint flows through these unchanged (layout/reindexing only)
+_LAYOUT_PRIMS = {
+    "reshape", "transpose", "squeeze", "expand_dims", "broadcast_in_dim",
+    "slice", "dynamic_slice", "dynamic_update_slice", "concatenate",
+    "rev", "gather", "scatter", "pad", "copy", "select_n", "tile",
+    "device_put", "split", "stop_gradient", "squeeze_p",
+}
+# reaching one of these means the in-register expand has begun: the
+# payload is no longer "packed bytes pretending to be dense"
+_EXPAND_PRIMS = {
+    "and", "or", "xor", "not", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "rem", "div",
+}
+_CALLBACK_PRIMS = {"infeed", "outfeed"}
+
+
+def _is_callback(prim_name: str) -> bool:
+    return ("callback" in prim_name or prim_name == "debug_print"
+            or prim_name in _CALLBACK_PRIMS)
+
+
+def _sub_jaxprs(eqn) -> List[Any]:
+    """Inner jaxprs of a higher-order eqn (scan/while/cond/pjit/...)."""
+    subs: List[Any] = []
+    for val in eqn.params.values():
+        items = val if isinstance(val, (list, tuple)) else [val]
+        for item in items:
+            inner = getattr(item, "jaxpr", item)
+            if hasattr(inner, "eqns") and hasattr(inner, "invars"):
+                subs.append(inner)
+    return subs
+
+
+def _align(inner_vars, outer_vars):
+    """Best-effort positional pairing.  Exact for pjit/scan/closed_call
+    (arity matches); for while/cond the carries sit at the end, so align
+    from the tail."""
+    n = min(len(inner_vars), len(outer_vars))
+    if n == 0:
+        return []
+    return list(zip(inner_vars[-n:], outer_vars[-n:]))
+
+
+def _is_float(dtype) -> bool:
+    import numpy as np
+    return np.issubdtype(np.dtype(dtype), np.floating)
+
+
+def upcast_findings(closed_jaxpr, tainted_invar_idx: Sequence[int],
+                    label: str) -> List[Finding]:
+    """CT301: float converts on still-packed payload vars."""
+    import jax.core as core
+    try:
+        Literal = core.Literal
+    except AttributeError:                      # newer layouts
+        from jax._src.core import Literal
+
+    findings: List[Finding] = []
+    jaxpr = closed_jaxpr.jaxpr
+
+    def walk(jx, taint: Set[Any], scope: str):
+        for eqn in jx.eqns:
+            prim = eqn.primitive.name
+            tainted_in = [v for v in eqn.invars
+                          if not isinstance(v, Literal) and v in taint]
+            if prim == "pallas_call":
+                continue                    # the sanctioned expand
+            if prim == "convert_element_type":
+                if tainted_in:
+                    new = eqn.params.get("new_dtype")
+                    if _is_float(new):
+                        findings.append(Finding(
+                            path=f"<jaxpr:{label}>", line=0, col=0,
+                            rule="CT301",
+                            message=(
+                                f"packed payload upcast to {new} before "
+                                f"its expand (in {scope}): the buffer "
+                                "is now dense — every bytes/elem claim "
+                                "downstream of this entry point is "
+                                "measuring full-width traffic"),
+                            context=scope))
+                    else:
+                        taint.update(eqn.outvars)
+                continue
+            if prim in _EXPAND_PRIMS:
+                continue                    # unpack has begun: consume
+            subs = _sub_jaxprs(eqn)
+            if subs:
+                for sub in subs:
+                    sub_taint = {iv for iv, ov in
+                                 _align(sub.invars, eqn.invars)
+                                 if not isinstance(ov, Literal)
+                                 and ov in taint}
+                    walk(sub, sub_taint, f"{scope}/{prim}")
+                    for iv, ov in _align(sub.outvars, eqn.outvars):
+                        if not isinstance(iv, Literal) and iv in sub_taint:
+                            taint.add(ov)
+                continue
+            if prim in _LAYOUT_PRIMS and tainted_in:
+                taint.update(eqn.outvars)
+
+    taint0 = {jaxpr.invars[i] for i in tainted_invar_idx
+              if i < len(jaxpr.invars)}
+    walk(jaxpr, taint0, label)
+    return findings
+
+
+def callback_findings(closed_jaxpr, label: str) -> List[Finding]:
+    """CT302: host callbacks / debug prints anywhere in the jaxpr."""
+    findings: List[Finding] = []
+    seen: Set[int] = set()
+
+    def walk(jx, scope: str):
+        if id(jx) in seen:
+            return
+        seen.add(id(jx))
+        for eqn in jx.eqns:
+            prim = eqn.primitive.name
+            if _is_callback(prim):
+                findings.append(Finding(
+                    path=f"<jaxpr:{label}>", line=0, col=0, rule="CT302",
+                    message=(f"host callback `{prim}` in hot path "
+                             f"({scope}): one host round trip per "
+                             "dispatch — remove it or move it out of "
+                             "the traced region"),
+                    context=scope))
+            for sub in _sub_jaxprs(eqn):
+                walk(sub, f"{scope}/{prim}")
+
+    walk(closed_jaxpr.jaxpr, label)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# tainted-leaf discovery
+
+
+_PAYLOAD_KEYS = ("'k_q'", "'v_q'")
+
+
+def payload_invar_indices(args: Tuple[Any, ...],
+                          extra_keys: Sequence[str] = ()) -> List[int]:
+    """Flattened-arg indices of packed payload leaves (``k_q``/``v_q``
+    code buffers) — the taint seeds for :func:`upcast_findings`.
+
+    Scale leaves (``k_s``/``v_s``) are deliberately *not* seeded:
+    ``e8m0_decode`` converts scale codes straight to float and that is
+    the decode, not a leak.
+    """
+    import jax
+
+    flat = jax.tree_util.tree_flatten_with_path(args)[0]
+    keys = tuple(_PAYLOAD_KEYS) + tuple(extra_keys)
+    out = []
+    for i, (path, _leaf) in enumerate(flat):
+        s = jax.tree_util.keystr(path)
+        if any(k in s for k in keys):
+            out.append(i)
+    return out
+
+
+def contract_findings(fn: Callable, args: Tuple[Any, ...], label: str,
+                      tainted_idx: Optional[Sequence[int]] = None
+                      ) -> List[Finding]:
+    """Trace ``fn(*args)`` and run CT301 + CT302 over the jaxpr."""
+    import jax
+
+    closed = jax.make_jaxpr(fn)(*args)
+    if tainted_idx is None:
+        tainted_idx = payload_invar_indices(args)
+    out = upcast_findings(closed, tainted_idx, label)
+    out += callback_findings(closed, label)
+    return out
+
+
+def cache_width_findings(fn: Callable, args: Tuple[Any, ...], label: str,
+                         cache_out_index: int = 1) -> List[Finding]:
+    """CT303: quantized cache leaves must come back at storage width."""
+    import jax
+    import numpy as np
+
+    shapes = jax.eval_shape(fn, *args)
+    outs = shapes if isinstance(shapes, tuple) else (shapes,)
+    if cache_out_index >= len(outs):
+        return []
+    cache_out = outs[cache_out_index]
+    findings: List[Finding] = []
+    flat = jax.tree_util.tree_flatten_with_path(cache_out)[0]
+    quant_keys = ("'k_q'", "'v_q'", "'k_s'", "'v_s'")
+    for path, leaf in flat:
+        s = jax.tree_util.keystr(path)
+        if any(k in s for k in quant_keys) and \
+                np.dtype(leaf.dtype) != np.dtype(np.uint8):
+            findings.append(Finding(
+                path=f"<eval_shape:{label}>", line=0, col=0, rule="CT303",
+                message=(f"quantized cache leaf {s} leaves {label} as "
+                         f"{leaf.dtype}, not uint8 storage — the cache "
+                         "has silently widened"),
+                context=label))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# the repo's named hot entry points
+
+
+def check_entry_points(kv_format: str = "float4_e2m1fn") -> List[Finding]:
+    """Contract-check the serving hot paths on a tiny quantized config.
+
+    Covers: ``lm_decode_step`` (via ``model.decode_step``), the fused
+    ``decode_loop`` scan body, ``lm_prefill_chunk``, ``qmatmul_packed``,
+    ``flash_decode_quant``.  Pure tracing — nothing executes.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.kernels import ops
+    from repro.models import build_model
+    from repro.serve.engine import ServeEngine
+
+    findings: List[Finding] = []
+
+    cfg = dataclasses.replace(get_config("gptneox-1b").reduced(),
+                              kv_format=kv_format)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch, max_seq = 2, 32
+    cache = model.init_cache(batch, max_seq)
+    token = jnp.zeros((batch,), jnp.int32)
+    pos = jnp.ones((batch,), jnp.int32)
+    active = jnp.ones((batch,), bool)
+
+    findings += contract_findings(
+        lambda p, c, t, q, a: model.decode_step(p, c, t, q, active=a),
+        (params, cache, token, pos, active), "lm_decode_step")
+    findings += cache_width_findings(
+        lambda p, c, t, q, a: model.decode_step(p, c, t, q, active=a),
+        (params, cache, token, pos, active), "lm_decode_step")
+
+    eng = ServeEngine(model, params, batch=batch, max_seq=max_seq,
+                      decode_block=4)
+    loop = eng._make_decode_loop(4)
+    findings += contract_findings(
+        loop, (eng.params, eng.cache, eng.state, eng._sample_key),
+        "decode_loop[k=4]")
+
+    chunk = jnp.zeros((4,), jnp.int32)
+    findings += contract_findings(
+        model.prefill_chunk,
+        (params, cache, chunk, jnp.int32(0), jnp.int32(0), jnp.int32(4)),
+        "lm_prefill_chunk")
+    findings += cache_width_findings(
+        model.prefill_chunk,
+        (params, cache, chunk, jnp.int32(0), jnp.int32(0), jnp.int32(4)),
+        "lm_prefill_chunk")
+
+    x = jnp.zeros((8, 64), jnp.float32)
+    pw = jnp.zeros((128, 64 // 2), jnp.uint8)      # fp4: 2 values/byte
+    sc = jnp.zeros((128, 64 // 32), jnp.float32)
+    findings += contract_findings(
+        lambda a, b, c: ops.qmatmul_packed(a, b, c, "float4_e2m1fn",
+                                           bm=8, bn=64, bk=32),
+        (x, pw, sc), "qmatmul_packed", tainted_idx=[1])
+
+    d, hq, hkv, s = 16, 4, 2, 8
+    q = jnp.zeros((batch, 1, hq, d), jnp.float32)
+    kv_cache = {
+        "k_q": jnp.zeros((batch, s, hkv, d // 2), jnp.uint8),
+        "k_s": jnp.zeros((batch, s, hkv, 1), jnp.uint8),
+        "v_q": jnp.zeros((batch, s, hkv, d // 2), jnp.uint8),
+        "v_s": jnp.zeros((batch, s, hkv, 1), jnp.uint8),
+        "slot_pos": jnp.full((batch, s), -1, jnp.int32),
+    }
+    findings += contract_findings(
+        lambda qq, kv, pp: ops.flash_decode_quant(qq, kv, pp, fmt="float4_e2m1fn",
+                                                  bk=8),
+        (q, kv_cache, pos), "flash_decode_quant")
+
+    return findings

@@ -1,0 +1,477 @@
+"""Pallas write-race / aliasing / VMEM checker (layer 3).
+
+Pallas semantics make one class of bug uniquely silent: two grid
+instances on *parallel* dimensions whose output ``index_map``s resolve
+to the same block are a write race — on the interpreter (how this repo
+runs off-TPU) the sequential emulation quietly picks a winner, so tests
+pass and the kernel is wrong only on real hardware.  Revisiting an
+output block across *sequential* ("arbitrary") dimensions is the legal
+accumulator pattern (``qmatmul``'s k-loop, ``ssd_scan``'s state
+emission), so the checker needs real semantics, not a grep.
+
+Two cooperating passes:
+
+* :func:`pallas_call_sites` — AST enumeration of every
+  ``compat.pallas_call`` / ``pl.pallas_call`` site under ``kernels/``
+  (coverage denominator: a driver must exercise each one).
+* :func:`capture` — monkeypatches :func:`repro.compat.pallas_call` to
+  record each call's grid / BlockSpecs / aliases / scratch and return a
+  stand-in producing zeros of ``out_shape``, so wrapper-level shape
+  logic runs but no kernel executes.  ``index_map``s are then evaluated
+  over the concrete grid, which is the only honest way to check them
+  (they are lambdas, not data).
+
+Checks per captured site:
+
+``PC201 write-race``       two grid points with different parallel
+                           coordinates write the same output block.
+``PC202 unsound-alias``    ``input_output_aliases`` pairs operands of
+                           mismatched shape/dtype, or the aliased
+                           input's blocks don't track the output's.
+``PC203 vmem-overflow``    per-grid-step block + scratch bytes exceed
+                           :func:`repro.compat.vmem_budget_bytes`.
+``PC200 uncovered-site``   a ``pallas_call`` in the source was never
+                           exercised by any driver (coverage hole).
+"""
+
+from __future__ import annotations
+
+import ast
+import contextlib
+import dataclasses
+import itertools
+import os
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.lint import Finding
+
+_GRID_POINT_CAP = 65536
+
+
+@dataclasses.dataclass
+class PallasSite:
+    """One recorded ``compat.pallas_call`` invocation."""
+    path: str                 # wrapper source file
+    line: int                 # line of the pallas_call site
+    scope: str                # wrapper function qualname
+    grid: Tuple[int, ...]
+    in_specs: Sequence[Any]
+    out_specs: Sequence[Any]          # normalised to a list
+    out_shapes: Sequence[Any]         # jax.ShapeDtypeStruct, same arity
+    multi_out: bool
+    dimension_semantics: Optional[Tuple[str, ...]]
+    input_output_aliases: Dict[int, int]
+    scratch_shapes: Sequence[Any]
+    arg_shapes: Sequence[Tuple[Tuple[int, ...], Any]] = ()
+
+    def describe(self) -> str:
+        return (f"{self.scope} grid={self.grid} "
+                f"semantics={self.dimension_semantics}")
+
+
+# ---------------------------------------------------------------------------
+# AST coverage pass
+
+
+def pallas_call_sites(paths: Sequence[str]) -> List[Tuple[str, int, str]]:
+    """(path, line, enclosing function) for every pallas_call site."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            files.extend(os.path.join(p, f) for f in sorted(os.listdir(p))
+                         if f.endswith(".py"))
+        else:
+            files.append(p)
+    sites: List[Tuple[str, int, str]] = []
+    for fp in files:
+        with open(fp, "r", encoding="utf-8") as fh:
+            tree = ast.parse(fh.read())
+        stack: List[Tuple[ast.AST, str]] = [(tree, "<module>")]
+        scopes: Dict[int, str] = {}
+
+        def walk(node, scope):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                scope = node.name
+            if isinstance(node, ast.Call):
+                func = node.func
+                name = func.attr if isinstance(func, ast.Attribute) else \
+                    getattr(func, "id", "")
+                if name == "pallas_call":
+                    sites.append((fp, node.lineno, scope))
+            for child in ast.iter_child_nodes(node):
+                walk(child, scope)
+
+        walk(tree, "<module>")
+        del stack, scopes
+    return sites
+
+
+# ---------------------------------------------------------------------------
+# capture harness
+
+
+def _as_list(x) -> List[Any]:
+    if x is None:
+        return []
+    if isinstance(x, (list, tuple)):
+        return list(x)
+    return [x]
+
+
+@contextlib.contextmanager
+def capture() -> Iterator[List[PallasSite]]:
+    """Record every ``compat.pallas_call`` made inside the block.
+
+    The patched call returns a stand-in that yields zeros of
+    ``out_shape`` so wrapper post-processing (reshape, slicing) still
+    runs; no kernel body executes.
+    """
+    import inspect
+
+    import jax.numpy as jnp
+
+    from repro import compat
+
+    sites: List[PallasSite] = []
+    real = compat.pallas_call
+
+    def fake_pallas_call(kernel, *, interpret=None,
+                         dimension_semantics=None, compiler_params=None,
+                         **kwargs):
+        caller = inspect.stack()[1]
+        out_shape = kwargs.get("out_shape")
+        multi = isinstance(out_shape, (list, tuple))
+        site = PallasSite(
+            path=caller.filename,
+            line=caller.lineno,
+            scope=caller.function,
+            grid=tuple(kwargs.get("grid", ()) or ()),
+            in_specs=_as_list(kwargs.get("in_specs")),
+            out_specs=_as_list(kwargs.get("out_specs")),
+            out_shapes=_as_list(out_shape),
+            multi_out=multi,
+            dimension_semantics=(tuple(dimension_semantics)
+                                 if dimension_semantics else None),
+            input_output_aliases=dict(
+                kwargs.get("input_output_aliases") or {}),
+            scratch_shapes=_as_list(kwargs.get("scratch_shapes")),
+        )
+
+        def run(*arrays):
+            site.arg_shapes = tuple(
+                (tuple(a.shape), a.dtype) for a in arrays)
+            sites.append(site)
+            outs = [jnp.zeros(s.shape, s.dtype) for s in site.out_shapes]
+            return outs if multi else outs[0]
+
+        return run
+
+    compat.pallas_call = fake_pallas_call
+    try:
+        yield sites
+    finally:
+        compat.pallas_call = real
+
+
+# ---------------------------------------------------------------------------
+# checks
+
+
+def _block_shape(spec) -> Optional[Tuple[Optional[int], ...]]:
+    shape = getattr(spec, "block_shape", None)
+    return tuple(shape) if shape is not None else None
+
+
+def _index_map(spec) -> Optional[Callable]:
+    return getattr(spec, "index_map", None)
+
+
+def _grid_points(grid: Tuple[int, ...]) -> Tuple[List[Tuple[int, ...]], bool]:
+    total = 1
+    for g in grid:
+        total *= int(g)
+    pts = itertools.product(*(range(int(g)) for g in grid))
+    if total <= _GRID_POINT_CAP:
+        return list(pts), False
+    return list(itertools.islice(pts, _GRID_POINT_CAP)), True
+
+
+def _semantics(site: PallasSite) -> Tuple[str, ...]:
+    if site.dimension_semantics is not None:
+        return site.dimension_semantics
+    # No declared semantics: Mosaic may parallelise any grid dimension,
+    # so the only safe assumption for race checking is all-parallel.
+    return tuple("parallel" for _ in site.grid)
+
+
+def _finding(site: PallasSite, rule: str, msg: str) -> Finding:
+    return Finding(path=site.path, line=site.line, col=1, rule=rule,
+                   message=msg, context=site.scope)
+
+
+def _nbytes(shape, dtype) -> int:
+    n = 1
+    for s in shape:
+        if s is not None:
+            n *= int(s)
+    return n * np.dtype(dtype).itemsize
+
+
+def check_sites(sites: Sequence[PallasSite],
+                vmem_budget: Optional[int] = None) -> List[Finding]:
+    from repro import compat
+
+    budget = vmem_budget if vmem_budget is not None \
+        else compat.vmem_budget_bytes()
+    findings: List[Finding] = []
+    for site in sites:
+        findings.extend(_check_write_races(site))
+        findings.extend(_check_aliases(site))
+        findings.extend(_check_vmem(site, budget))
+    return findings
+
+
+def _check_write_races(site: PallasSite) -> List[Finding]:
+    out: List[Finding] = []
+    if not site.grid:
+        return out
+    sem = _semantics(site)
+    par_axes = [i for i, s in enumerate(sem) if s == "parallel"]
+    if not par_axes:
+        return out
+    points, truncated = _grid_points(site.grid)
+    for oi, spec in enumerate(site.out_specs):
+        imap = _index_map(spec)
+        if imap is None:
+            continue
+        writers: Dict[Tuple, Tuple] = {}   # block idx -> parallel coords
+        raced = False
+        for p in points:
+            try:
+                blk = imap(*p)
+            except Exception as exc:   # index_map arity mismatch etc.
+                out.append(_finding(
+                    site, "PC201",
+                    f"output {oi} index_map raised {exc!r} at grid "
+                    f"point {p} (arity/grid mismatch)"))
+                raced = True
+                break
+            blk = tuple(blk) if isinstance(blk, tuple) else (blk,)
+            par = tuple(p[a] for a in par_axes)
+            prev = writers.get(blk)
+            if prev is None:
+                writers[blk] = par
+            elif prev != par:
+                out.append(_finding(
+                    site, "PC201",
+                    f"write race on output {oi}: grid points with "
+                    f"parallel coords {prev} and {par} both write "
+                    f"block {blk} (grid={site.grid}, "
+                    f"semantics={sem}); make the racing dimension "
+                    "'arbitrary' or give each instance its own block"))
+                raced = True
+                break
+        if raced:
+            continue
+        if truncated:
+            out.append(_finding(
+                site, "PC201",
+                f"grid {site.grid} exceeds {_GRID_POINT_CAP} points; "
+                f"race check for output {oi} covered only a prefix — "
+                "shrink the driver shapes"))
+    return out
+
+
+def _check_aliases(site: PallasSite) -> List[Finding]:
+    out: List[Finding] = []
+    if not site.input_output_aliases:
+        return out
+    points, _ = _grid_points(site.grid) if site.grid else ([()], False)
+    for ii, oi in site.input_output_aliases.items():
+        if ii >= len(site.arg_shapes) or oi >= len(site.out_shapes):
+            out.append(_finding(
+                site, "PC202",
+                f"input_output_aliases maps input {ii} -> output {oi} "
+                f"but the call has {len(site.arg_shapes)} inputs / "
+                f"{len(site.out_shapes)} outputs"))
+            continue
+        in_shape, in_dtype = site.arg_shapes[ii]
+        o = site.out_shapes[oi]
+        if tuple(o.shape) != in_shape or np.dtype(o.dtype) != \
+                np.dtype(in_dtype):
+            out.append(_finding(
+                site, "PC202",
+                f"unsound alias input {ii} -> output {oi}: shapes/"
+                f"dtypes differ ({in_shape}/{in_dtype} vs "
+                f"{tuple(o.shape)}/{o.dtype}) — donation would "
+                "reinterpret the buffer"))
+            continue
+        in_spec = site.in_specs[ii] if ii < len(site.in_specs) else None
+        out_spec = site.out_specs[oi] if oi < len(site.out_specs) else None
+        in_map, out_map = _index_map(in_spec), _index_map(out_spec)
+        if in_map is None or out_map is None:
+            continue
+        if _block_shape(in_spec) != _block_shape(out_spec):
+            out.append(_finding(
+                site, "PC202",
+                f"unsound alias input {ii} -> output {oi}: block "
+                f"shapes differ ({_block_shape(in_spec)} vs "
+                f"{_block_shape(out_spec)}) — in-place blocks must "
+                "coincide"))
+            continue
+        for p in points:
+            try:
+                if tuple(np.ravel(in_map(*p))) != \
+                        tuple(np.ravel(out_map(*p))):
+                    out.append(_finding(
+                        site, "PC202",
+                        f"unsound alias input {ii} -> output {oi}: at "
+                        f"grid point {p} the input block "
+                        f"{in_map(*p)} != output block {out_map(*p)} — "
+                        "the kernel would read memory the alias "
+                        "already overwrote"))
+                    break
+            except Exception:
+                break
+    return out
+
+
+def _check_vmem(site: PallasSite, budget: int) -> List[Finding]:
+    total = 0
+    parts: List[str] = []
+
+    def add(label, shape, dtype):
+        nonlocal total
+        b = _nbytes(shape, dtype)
+        total += b
+        if b:
+            parts.append(f"{label}={b}")
+
+    for i, spec in enumerate(site.in_specs):
+        shape = _block_shape(spec)
+        if shape is None:
+            if i < len(site.arg_shapes):
+                shape = site.arg_shapes[i][0]
+            else:
+                continue
+        dtype = site.arg_shapes[i][1] if i < len(site.arg_shapes) \
+            else np.float32
+        # None entries in a block shape mean "not blocked over" and
+        # occupy the full axis only when taken from arg shape; treat
+        # None as 1 (conservatively small) — packed sub-byte storage is
+        # already reflected in the uint8 arg dtype, so bytes are true
+        # storage bytes.
+        add(f"in{i}", shape, dtype)
+    for oi, spec in enumerate(site.out_specs):
+        shape = _block_shape(spec)
+        if shape is None and oi < len(site.out_shapes):
+            shape = tuple(site.out_shapes[oi].shape)
+        dtype = site.out_shapes[oi].dtype if oi < len(site.out_shapes) \
+            else np.float32
+        add(f"out{oi}", shape or (), dtype)
+    for si, scr in enumerate(site.scratch_shapes):
+        shape = getattr(scr, "shape", None)
+        dtype = getattr(scr, "dtype", np.float32)
+        if shape is not None:
+            add(f"scratch{si}", tuple(shape), dtype)
+    if total > budget:
+        return [_finding(
+            site, "PC203",
+            f"per-grid-step VMEM footprint {total} bytes "
+            f"({', '.join(parts)}) exceeds budget {budget} bytes — "
+            "shrink block sizes (double-buffering needs headroom on "
+            "top of this)")]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# repo drivers: exercise every kernels/ pallas_call with tiny shapes
+
+
+def _repo_driver_sites() -> List[PallasSite]:
+    import importlib
+
+    import jax.numpy as jnp
+
+    from repro import lowbits
+
+    # repro.kernels.__init__ shadows submodule names with the jitted ops
+    # wrappers — resolve the submodules via importlib
+    mod = lambda name: importlib.import_module(f"repro.kernels.{name}")
+    flash_attention, flash_decode = mod("flash_attention"), mod("flash_decode")
+    probe_chase, probe_dep_chain = mod("probe_chase"), mod("probe_dep_chain")
+    probe_mma, qmatmul, ssd_scan = (mod("probe_mma"), mod("qmatmul"),
+                                    mod("ssd_scan"))
+
+    with capture() as sites:
+        # flash attention: b=1, hq=4, hkv=2 exercises the GQA map
+        q = jnp.zeros((1, 4, 8, 8), jnp.float32)
+        kv = jnp.zeros((1, 2, 12, 8), jnp.float32)
+        flash_attention.flash_attention_bhsd(q, kv, kv, bq=4, bk=4)
+
+        # flash decode, container KV
+        qd = jnp.zeros((2, 4, 8), jnp.float32)
+        kc = jnp.zeros((2, 2, 8, 8), jnp.float32)
+        sp = jnp.zeros((2, 8), jnp.int32)
+        pos = jnp.zeros((2,), jnp.int32)
+        flash_decode.flash_decode_bhd(qd, kc, kc, sp, pos, bk=4)
+
+        # flash decode, packed fp4 KV (+ e8m0 scales)
+        ps = lowbits.packed_spec("float4_e2m1fn")
+        d = 8
+        stored = d // ps.values_per_group * ps.bytes_per_group
+        kq = jnp.zeros((2, 2, 8, stored), jnp.uint8)
+        ks = jnp.zeros((2, 2, 8, 1), jnp.uint8)
+        flash_decode.flash_decode_quant_bhd(
+            qd, kq, ks, kq, ks, sp, pos, fmt="float4_e2m1fn", bk=4)
+
+        # qmatmul, container + packed (BLOCK=32 scale granularity)
+        x = jnp.zeros((128, 64), jnp.float32)
+        qw = jnp.zeros((128, 64), jnp.float32)
+        sc = jnp.zeros((128, 64 // 32), jnp.float32)
+        qmatmul.qmatmul_mkn(x, qw, sc, bm=64, bn=64, bk=32)
+        pw = jnp.zeros((128, 64 // 2), jnp.uint8)
+        qmatmul.qmatmul_packed_mkn(x, pw, sc, "float4_e2m1fn", bm=64, bn=64, bk=32)
+
+        # ssd scan (sequential chunk axis + last-chunk state emission)
+        xs = jnp.zeros((2, 2, 8, 4), jnp.float32)
+        da = jnp.zeros((2, 2, 8), jnp.float32)
+        bc = jnp.zeros((2, 8, 4), jnp.float32)
+        ssd_scan.ssd_scan_bhsp(xs, da, bc, bc, chunk=4)
+
+        # probes
+        probe_mma.mma_probe(jnp.zeros((1, 8, 8), jnp.float32),
+                            jnp.zeros((8, 8), jnp.float32),
+                            bm=8, bn=8, bk=8, ilp=1)
+        probe_chase.chase(jnp.zeros((8, 128), jnp.int32), steps=2)
+        probe_dep_chain.dep_chain(jnp.zeros((1, 8, 128), jnp.float32),
+                                  chain_len=2)
+    return sites
+
+
+def check_kernels(kernels_dir: Optional[str] = None,
+                  vmem_budget: Optional[int] = None) -> List[Finding]:
+    """Drive every kernel wrapper under capture and check all sites.
+
+    Also cross-checks coverage: each ``pallas_call`` found by AST in
+    ``kernels_dir`` must have been exercised (PC200 otherwise).
+    """
+    import repro.kernels as _k
+
+    kernels_dir = kernels_dir or os.path.dirname(_k.__file__)
+    sites = _repo_driver_sites()
+    findings = check_sites(sites, vmem_budget=vmem_budget)
+    exercised = {(os.path.abspath(s.path), s.line) for s in sites}
+    for path, line, scope in pallas_call_sites([kernels_dir]):
+        if (os.path.abspath(path), line) not in exercised:
+            findings.append(Finding(
+                path=path, line=line, col=1, rule="PC200",
+                message=(f"pallas_call in {scope} is not exercised by "
+                         "any analysis driver — add one to "
+                         "repro.analysis.pallas_check._repo_driver_sites"),
+                context=scope))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

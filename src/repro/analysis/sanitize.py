@@ -1,0 +1,208 @@
+"""Runtime sanitizers: compile counters, host-sync counters, and the
+scripted serving scenario (layer 2's runtime half).
+
+Static checks can't see everything: a recompile caused by a changed
+static arg, or a host sync hidden behind a library call, only exists at
+runtime.  The paper's §IV discipline (characterize dispatch/measurement
+overhead before trusting numbers) translates here to two counters:
+
+* :class:`CompileCounter` — counts XLA backend compiles via
+  ``jax.monitoring`` duration events.  Zero inside a measured region
+  means the timings in ``BENCH_serve.json`` are steady-state, not
+  trace+compile noise.
+* :class:`SyncCounter` — counts forced per-value host materializations
+  (``float()``/``int()``/``.item()``/``.tolist()``/``device_get``) by
+  wrapping the array ``_value`` materialization hook.  The engine's one
+  batched ``np.asarray`` per K tokens reads the buffer directly and is
+  the *designed* sync; everything this counter sees inside the fused
+  loop is an accidental round trip.
+
+:func:`sanitize_serving` wraps a scripted serving scenario in
+``jax.transfer_guard`` plus both counters and returns a report proving
+(a) each serving executable compiled exactly once, (b) the fused K-step
+decode loop performed zero implicit host transfers, and (c) what
+``quantize_tree`` costs in syncs per tree (2 after the PR-6 fix; 2 per
+*leaf* before it).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, List, Optional
+
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+class SyncCounter:
+    """Counts forced host materializations of device arrays.
+
+    Implemented by wrapping ``ArrayImpl._value`` — the property every
+    ``float()``/``int()``/``bool()``/``.item()``/``.tolist()``/
+    ``jax.device_get`` materialization funnels through.  ``np.asarray``
+    on a committed CPU array short-circuits via the buffer protocol and
+    is not counted; that path is the engine's explicit batched sync, so
+    "zero counted syncs" is exactly "zero *implicit* transfers".
+    """
+
+    def __init__(self):
+        self.count = 0
+        self._orig = None
+
+    def __enter__(self) -> "SyncCounter":
+        import jax._src.array as _array
+
+        orig = _array.ArrayImpl.__dict__["_value"]
+        self._orig = orig
+        fget = orig.fget if isinstance(orig, property) else orig
+        counter = self
+
+        def counting(arr):
+            counter.count += 1
+            return fget(arr)
+
+        _array.ArrayImpl._value = property(counting)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        import jax._src.array as _array
+
+        _array.ArrayImpl._value = self._orig
+        self._orig = None
+
+
+class CompileCounter:
+    """Counts XLA backend compiles via ``jax.monitoring`` events."""
+
+    def __init__(self):
+        self.count = 0
+        self.events: List[str] = []
+
+    def _listener(self, event: str, duration: float, **kw) -> None:
+        if event == COMPILE_EVENT:
+            self.count += 1
+            self.events.append(event)
+
+    def __enter__(self) -> "CompileCounter":
+        import jax
+
+        jax.monitoring.register_event_duration_secs_listener(
+            self._listener)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        from jax._src import monitoring as _mon
+
+        unreg = getattr(
+            _mon, "_unregister_event_duration_listener_by_callback", None)
+        if unreg is not None:
+            unreg(self._listener)
+        else:                                   # pragma: no cover
+            _mon.clear_event_listeners()
+
+
+@contextlib.contextmanager
+def no_implicit_transfers():
+    """``jax.transfer_guard("disallow")`` when available (on CPU the
+    committed-array read path bypasses the guard, so SyncCounter is the
+    belt that works everywhere; on real accelerators the guard also
+    catches implicit D2H/H2D the counter can't see)."""
+    import jax
+
+    guard = getattr(jax, "transfer_guard", None)
+    if guard is None:                           # pragma: no cover
+        yield
+        return
+    with guard("disallow"):
+        yield
+
+
+def jit_cache_sizes(fns: Dict[str, Any]) -> Dict[str, int]:
+    """``name -> _cache_size()`` for a dict of jitted callables."""
+    out: Dict[str, int] = {}
+    for name, fn in fns.items():
+        size = getattr(fn, "_cache_size", None)
+        out[name] = int(size()) if callable(size) else -1
+    return out
+
+
+def _engine_executables(eng) -> Dict[str, Any]:
+    fns = {f"decode_loop[k={k}]": fn for k, fn in eng._loops.items()}
+    fns["prefill_chunk"] = eng._prefill_chunk_fn
+    fns["admit"] = eng._admit_fn
+    fns["clear_slot"] = eng._clear_slot_fn
+    return fns
+
+
+def _drive(eng, prompts, max_new: int, k: int, loops: int):
+    for p in prompts:
+        eng.submit(p, max_new_tokens=max_new)
+    eng._admit()                 # prefill + first-token sampling (syncs
+    # here are per-admission and expected; the measured region below is
+    # the pure fused loop)
+    with no_implicit_transfers(), SyncCounter() as sc, \
+            CompileCounter() as cc:
+        for _ in range(loops):
+            eng.decode_loop(k)
+    results = eng.run(max_steps=4)       # flush stragglers (not timed)
+    return results, sc.count, cc.count
+
+
+def sanitize_serving(kv_format: Optional[str] = None,
+                     weight_format: Optional[str] = None) -> Dict:
+    """Scripted serving scenario under the full sanitizer stack.
+
+    Two passes of the same script: a warm-up pass that is *allowed* to
+    compile, then a measured pass (after ``reset()``, which keeps the
+    executables) in which every compile and every implicit sync is a
+    finding.  Returns a report dict; the tier-1 test asserts on it.
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve.engine import ServeEngine
+    from repro.serve.quant import quantize_tree
+
+    cfg = get_config("gptneox-1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    k, loops = 4, 2
+    prompts = [[1, 2, 3, 4], [5, 6, 7, 8]]
+    max_new = 1 + k * loops          # admit token + exactly `loops` K-blocks
+
+    eng = ServeEngine(model, params, batch=2, max_seq=64,
+                      kv_format=kv_format, weight_format=weight_format,
+                      decode_block=k, prefill_chunk=4)
+
+    warm_results, _, warm_compiles = _drive(eng, prompts, max_new, k, loops)
+
+    eng.reset()
+    results, loop_syncs, loop_compiles = _drive(
+        eng, prompts, max_new, k, loops)
+
+    cache_sizes = jit_cache_sizes(_engine_executables(eng))
+
+    # satellite probe: quantize_tree's host-sync bill (the PR-6 fix
+    # accumulates MSE/byte stats on device and syncs once per tree)
+    with SyncCounter() as qc:
+        quantize_tree(params, "float4_e2m1fn", packed=True)
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+
+    report = {
+        "kv_format": kv_format or "none",
+        "warm_compiles": warm_compiles,
+        "measured_compiles": loop_compiles,
+        "measured_loop_syncs": loop_syncs,
+        "compile_cache_sizes": cache_sizes,
+        "compiled_exactly_once": all(
+            v == 1 for v in cache_sizes.values()),
+        "zero_implicit_loop_transfers": loop_compiles == 0
+        and loop_syncs == 0,
+        "tokens_match_warmup": (
+            [r.tokens for r in results]
+            == [r.tokens for r in warm_results]),
+        "quantize_tree_syncs": qc.count,
+        "quantize_tree_leaves": n_leaves,
+    }
+    return report

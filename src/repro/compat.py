@@ -39,6 +39,7 @@ import dataclasses
 import functools
 import importlib.util
 import inspect
+import os
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -65,6 +66,7 @@ __all__ = [
     "pallas_interpret_default",
     "tpu_compiler_params",
     "pallas_call",
+    "vmem_budget_bytes",
     "has_hypothesis",
     "CompatReport",
     "report",
@@ -307,6 +309,24 @@ def tpu_compiler_params(**kwargs):
     except TypeError:
         pass
     return cls(**kwargs)
+
+
+def vmem_budget_bytes() -> int:
+    """Per-core VMEM available to a single Pallas grid step, in bytes.
+
+    TPU cores carry ~16 MiB of VMEM (see the Pallas TPU docs); Mosaic
+    needs headroom for double-buffered pipelining, so the usable budget
+    for one grid step's blocks + scratch is roughly half.  Off-TPU the
+    interpreter has no such limit, but the static checker
+    (:mod:`repro.analysis.pallas_check`) still enforces the TPU budget so
+    kernels developed under interpret mode don't blow up on hardware.
+    Override with ``REPRO_VMEM_BUDGET_BYTES`` when targeting parts with
+    different VMEM (e.g. v4's 32 MiB variants).
+    """
+    env = os.environ.get("REPRO_VMEM_BUDGET_BYTES")
+    if env:
+        return int(env)
+    return 8 * 1024 * 1024
 
 
 def pallas_call(kernel: Callable, *, interpret: Optional[bool] = None,

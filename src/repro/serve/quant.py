@@ -132,7 +132,7 @@ def quantize_blockwise(w: jax.Array, fmt: str
         if lowbits.is_packable(fmt):           # trace-safe RTNE arithmetic
             vals = lowbits.quantize_values(vals, fmt)
         else:   # byte format emulated (ancient JAX w/o fp8): host rounding
-            vals = jnp.asarray(
+            vals = jnp.asarray(   # jaxlint: disable=JL101(host fallback for ancient JAX without native fp8 dtypes; unreachable under jit there because the whole engine already requires eager weights at build time)
                 np.asarray(vals).astype(round_dtype).astype(np.float32))
     q = vals.astype(dtype)
     return q.reshape(*lead, n), scales
@@ -149,6 +149,45 @@ def dequantize_blockwise(q: jax.Array, scales: jax.Array,
 # --------------------------------------------------------------------- #
 # Weight-only PTQ over a parameter tree (Tab VIII serving sweep)
 # --------------------------------------------------------------------- #
+
+class _TreeStats:
+    """Shared MSE/byte accounting for the tree quantizers.
+
+    The squared-error sums accumulate as 0-d *device* scalars; nothing
+    forces a host sync until :meth:`mse` reduces them in one
+    ``jax.device_get`` per tree.  (The previous copy-pasted accounting
+    called ``float(jnp.sum(...))`` twice per leaf — two blocking
+    round trips per parameter, dominating engine build time on real
+    devices; ``repro.analysis.sanitize`` counts exactly this.)
+    """
+
+    def __init__(self):
+        self.n_q = 0
+        self.q_bytes = 0
+        self.w_bytes = 0
+        self.w_elems = 0
+        self._err = []       # per-leaf device scalars: sum(err^2)
+        self._ref = []       # per-leaf device scalars: sum(ref^2)
+
+    def passthrough(self, leaf) -> None:
+        self.q_bytes += leaf.nbytes
+
+    def quantized(self, deq, leaf, stored_bytes: int) -> None:
+        self.n_q += 1
+        self.q_bytes += stored_bytes
+        self.w_elems += leaf.size
+        ref = leaf.astype(jnp.float32)
+        err = deq.astype(jnp.float32) - ref
+        self._err.append(jnp.sum(jnp.square(err)))
+        self._ref.append(jnp.sum(jnp.square(ref)))
+
+    def mse(self) -> float:
+        if not self._err:
+            return 0.0
+        num, den = jax.device_get((jnp.sum(jnp.stack(self._err)),
+                                   jnp.sum(jnp.stack(self._ref))))
+        return float(num) / max(float(den), 1e-30)
+
 
 def _quantizable(path_names, leaf) -> bool:
     if leaf.ndim < 2:
@@ -183,27 +222,23 @@ def quantize_params(params: Any, fmt: str, compute_dtype=jnp.bfloat16
                       "bytes_per_element": jnp.dtype(fmt).itemsize}
 
     bpe = compat.storage_bytes_per_element(fmt, packed=True)
-    n_q, q_bytes, mse_num, mse_den = 0, 0, 0.0, 0.0
+    stats = _TreeStats()
 
     def visit(path, leaf):
-        nonlocal n_q, q_bytes, mse_num, mse_den
         names = tuple(str(getattr(k, "key", k)) for k in path)
         if not _quantizable(names, leaf):
-            q_bytes += leaf.nbytes
+            stats.passthrough(leaf)
             return leaf
         q, s = quantize_blockwise(leaf, fmt)
         deq = dequantize_blockwise(q, s, compute_dtype)
-        n_q += 1
-        q_bytes += int(leaf.size * bpe) + s.size    # scales: 1 B e8m0 each
-        err = (deq.astype(jnp.float32) - leaf.astype(jnp.float32))
-        mse_num += float(jnp.sum(jnp.square(err)))
-        mse_den += float(jnp.sum(jnp.square(leaf.astype(jnp.float32))))
+        # scales: 1 B e8m0 each
+        stats.quantized(deq, leaf, int(leaf.size * bpe) + s.size)
         return deq
 
     out = jax.tree_util.tree_map_with_path(visit, params)
-    return out, {"format": fmt, "quantized_bytes": int(q_bytes),
-                 "n_quantized": n_q, "bytes_per_element": bpe,
-                 "mse": mse_num / max(mse_den, 1e-30)}
+    return out, {"format": fmt, "quantized_bytes": int(stats.q_bytes),
+                 "n_quantized": stats.n_q, "bytes_per_element": bpe,
+                 "mse": stats.mse()}
 
 
 # --------------------------------------------------------------------- #
@@ -232,38 +267,32 @@ def quantize_tree(params: Any, fmt: str, packed: bool = True
     reverses.
     """
     do_pack = packed and lowbits.is_packable(fmt)
-    n_q, q_bytes, w_bytes, w_elems = 0, 0, 0, 0
-    mse_num, mse_den = 0.0, 0.0
+    stats = _TreeStats()
 
     def visit(path, leaf):
-        nonlocal n_q, q_bytes, w_bytes, w_elems, mse_num, mse_den
         names = tuple(str(getattr(k, "key", k)) for k in path)
         if not _quantizable(names, leaf):
-            q_bytes += leaf.nbytes
+            stats.passthrough(leaf)
             return leaf
         q, s = quantize_blockwise(leaf, fmt)
-        err = (dequantize_blockwise(q, s, jnp.float32)
-               - leaf.astype(jnp.float32))
-        mse_num += float(jnp.sum(jnp.square(err)))
-        mse_den += float(jnp.sum(jnp.square(leaf.astype(jnp.float32))))
+        deq = dequantize_blockwise(q, s, jnp.float32)
         if do_pack:
             q = jnp.asarray(lowbits.pack(
                 np.asarray(q.astype(jnp.float32)), fmt))
         s_codes = jnp.asarray(lowbits.e8m0_encode(np.asarray(s)))
-        n_q += 1
-        q_bytes += q.nbytes + s_codes.nbytes
-        w_bytes += q.nbytes
-        w_elems += leaf.size
+        stats.quantized(deq, leaf, q.nbytes + s_codes.nbytes)
+        stats.w_bytes += q.nbytes
         return {"q": q, "scales": s_codes, "scale_fmt": "e8m0",
                 "fmt": fmt, "shape": leaf.shape, "packed": do_pack}
 
     store = jax.tree_util.tree_map_with_path(visit, params)
     return store, {"format": fmt, "packed": do_pack,
-                   "quantized_bytes": int(q_bytes), "n_quantized": n_q,
-                   "weight_bytes": int(w_bytes),
-                   "mse": mse_num / max(mse_den, 1e-30),
+                   "quantized_bytes": int(stats.q_bytes),
+                   "n_quantized": stats.n_q,
+                   "weight_bytes": int(stats.w_bytes),
+                   "mse": stats.mse(),
                    "bytes_per_element": (
-                       w_bytes / w_elems if w_elems
+                       stats.w_bytes / stats.w_elems if stats.w_elems
                        else compat.storage_bytes_per_element(
                            fmt, packed=do_pack))}
 

@@ -1,0 +1,544 @@
+"""Tier-1 tests for the static-analysis subsystem (repro.analysis).
+
+Three layers, each with positive (bug detected) and negative (idiom not
+flagged) fixtures:
+
+* lint (JL1xx)     — AST rules keyed to bug classes this repo has
+                     actually shipped: PR-4's jit-captured attr
+                     mutation, PR-3's stale memo cache, plus the
+                     host-op / control-flow / wall-clock tracer rules.
+* contracts (CT3xx)— jaxpr checks: packed-payload upcasts, host
+                     callbacks, cache storage width.
+* pallas (PC2xx)   — write-race / alias / VMEM checks over recorded
+                     ``pallas_call`` sites, plus coverage of the repo's
+                     real kernels.
+
+Plus the runtime sanitizer: the fused serving loop must compile exactly
+once and perform zero implicit host transfers, and ``quantize_tree``
+must sync O(1) per tree, not O(leaves).
+"""
+
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.analysis import lint as L
+from repro.analysis import pallas_check as PC
+from repro.analysis import sanitize as SAN
+from repro.analysis import contracts as CT
+
+
+def run_lint(src, roots=("f",), path="fixture.py", select=None):
+    cfg = L.LintConfig(traced_roots={path: set(roots)},
+                       select=set(select) if select else None)
+    return L.lint_source(textwrap.dedent(src), path, cfg)
+
+
+def rules(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# layer 1: lint rules
+
+
+class TestJL101HostOps:
+    def test_float_on_traced_value(self):
+        out = run_lint("""
+            def f(x):
+                y = x * 2
+                return float(y)
+        """)
+        assert rules(out) == ["JL101"]
+
+    def test_np_asarray_on_traced_value(self):
+        out = run_lint("""
+            import numpy as np
+            def f(x):
+                return np.asarray(x).sum()
+        """)
+        assert "JL101" in rules(out)
+
+    def test_item_tolist(self):
+        out = run_lint("""
+            def f(x):
+                a = x.item()
+                b = x.tolist()
+                return a, b
+        """)
+        assert rules(out) == ["JL101", "JL101"]
+
+    def test_metadata_only_np_is_clean(self):
+        out = run_lint("""
+            import numpy as np
+            def f(x):
+                if np.issubdtype(x.dtype, np.floating):
+                    return x
+                return x * np.float32(2.0)
+        """)
+        assert out == []
+
+    def test_untraced_function_is_clean(self):
+        out = run_lint("""
+            def g(x):
+                return float(x)
+        """)
+        assert out == []
+
+    def test_pragma_suppresses_with_reason(self):
+        out = run_lint("""
+            def f(x):
+                return float(x)  # jaxlint: disable=JL101(eager-only path)
+        """)
+        assert out == []
+
+    def test_transitive_callee_inherits_traced(self):
+        # f is the configured root; helper is only reached from f, so a
+        # host op inside helper is still a finding
+        out = run_lint("""
+            def helper(x):
+                return float(x)
+            def f(x):
+                return helper(x)
+        """)
+        assert "JL101" in rules(out)
+
+
+class TestJL102ControlFlow:
+    def test_if_on_traced_value(self):
+        out = run_lint("""
+            def f(x):
+                if x > 0:
+                    return x
+                return -x
+        """)
+        assert rules(out) == ["JL102"]
+
+    def test_while_on_traced_value(self):
+        out = run_lint("""
+            def f(x):
+                while x < 10:
+                    x = x + 1
+                return x
+        """)
+        assert "JL102" in rules(out)
+
+    def test_shape_branch_is_static(self):
+        out = run_lint("""
+            def f(x):
+                if x.ndim == 2:
+                    return x
+                return x[None]
+        """)
+        assert out == []
+
+    def test_isinstance_and_config_are_static(self):
+        out = run_lint("""
+            def f(x, cfg):
+                if isinstance(x, dict):
+                    return x["a"]
+                if cfg.heads > 1:
+                    return x * cfg.heads
+                return x
+        """)
+        assert out == []
+
+    def test_membership_test_is_static(self):
+        out = run_lint("""
+            def f(x, batch):
+                if "patches" in batch:
+                    return x
+                return -x
+        """)
+        assert out == []
+
+
+class TestJL103CapturedMutation:
+    # PR-4 regression: ServeEngine captured self.temperature in its
+    # jitted sampler; a later `eng.temperature = 0.5` was silently
+    # ignored by the stale executable.
+    PR4_PATTERN = """
+        import jax
+
+        class Engine:
+            def __init__(self, temperature):
+                self.temperature = temperature
+                temp = self.temperature
+                self._step = jax.jit(lambda x: x / temp)
+
+            def set_temperature(self, t):
+                self.temperature = t
+    """
+
+    def test_pr4_pattern_detected(self):
+        out = run_lint(self.PR4_PATTERN, roots=())
+        assert rules(out) == ["JL103"]
+        assert "temperature" in out[0].message
+
+    def test_direct_self_read_in_local_def(self):
+        out = run_lint("""
+            import jax
+
+            class Engine:
+                def build(self):
+                    def step(x):
+                        return x * self.scale
+                    self._step = jax.jit(step)
+
+                def rescale(self, s):
+                    self.scale = s
+        """, roots=())
+        assert rules(out) == ["JL103"]
+
+    def test_uncaptured_attr_mutation_is_clean(self):
+        out = run_lint("""
+            import jax
+
+            class Engine:
+                def __init__(self, temperature):
+                    temp = temperature
+                    self._step = jax.jit(lambda x: x / temp)
+
+                def retarget(self, t):
+                    self.queue = t
+        """, roots=())
+        assert out == []
+
+    def test_readonly_property_backing_field_is_sanctioned(self):
+        # the fix the rule message recommends must itself lint clean
+        out = run_lint("""
+            import jax
+
+            class Engine:
+                def __init__(self, temperature):
+                    self._temperature = temperature
+                    temp = self._temperature
+                    self._step = jax.jit(lambda x: x / temp)
+
+                @property
+                def temperature(self):
+                    return self._temperature
+        """, roots=())
+        assert out == []
+
+
+class TestJL104WallClock:
+    def test_time_in_traced_scope(self):
+        out = run_lint("""
+            import time
+            def f(x):
+                t0 = time.perf_counter()
+                return x + t0
+        """)
+        assert "JL104" in rules(out)
+
+    def test_np_random_in_traced_scope(self):
+        out = run_lint("""
+            import numpy as np
+            def f(x):
+                return x + np.random.rand()
+        """)
+        assert "JL104" in rules(out)
+
+    def test_jax_prng_is_clean(self):
+        out = run_lint("""
+            import jax
+            def f(x, key):
+                return x + jax.random.normal(key, x.shape)
+        """)
+        assert out == []
+
+
+class TestJL105StaleMemo:
+    # PR-3 regression: `_format_table` was lru_cached over the mutable
+    # format registry, so formats registered later never appeared.
+    def test_pr3_pattern_detected(self):
+        out = run_lint("""
+            import functools
+
+            @functools.lru_cache()
+            def format_table():
+                rows = [fmt.name for fmt in get_registry()]
+                return "\\n".join(rows)
+        """, roots=())
+        assert rules(out) == ["JL105"]
+
+    def test_pure_memo_is_clean(self):
+        out = run_lint("""
+            import functools
+
+            @functools.lru_cache(maxsize=None)
+            def fib(n):
+                return n if n < 2 else fib(n - 1) + fib(n - 2)
+        """, roots=())
+        assert out == []
+
+
+class TestBaselineAndPaths:
+    def test_baseline_waives_exact_finding_once(self, tmp_path):
+        fix = tmp_path / "fixture.py"
+        fix.write_text(textwrap.dedent("""
+            def f(x):
+                return float(x)
+        """))
+        cfg = L.LintConfig(traced_roots={"fixture.py": {"f"}})
+        first = L.lint_paths([str(fix)], config=cfg, root=str(tmp_path))
+        assert rules(first) == ["JL101"]
+        base = [{"path": f.path, "rule": f.rule, "context": f.context,
+                 "text": f.text} for f in first]
+        again = L.lint_paths([str(fix)], config=cfg, baseline=base,
+                             root=str(tmp_path))
+        assert again == []
+        # baseline entries age out when the waived line changes
+        fix.write_text(textwrap.dedent("""
+            def f(x):
+                return float(x + 1)
+        """))
+        changed = L.lint_paths([str(fix)], config=cfg, baseline=base,
+                               root=str(tmp_path))
+        assert rules(changed) == ["JL101"]
+
+    def test_repo_gate_is_clean(self):
+        """The shipped gate: src + benchmarks lint clean (pragmas only,
+        empty baseline)."""
+        import os
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        out = L.lint_paths([os.path.join(root, "src"),
+                            os.path.join(root, "benchmarks")],
+                           root=root)
+        assert out == [], "\n".join(f.render() for f in out)
+
+
+# ---------------------------------------------------------------------------
+# layer 2: jaxpr contracts
+
+
+class TestContracts:
+    def test_ct301_upcast_detected(self):
+        def bad(codes):
+            # "forgot the unpack": treat packed bytes as dense values
+            return codes.astype(jnp.float32) * 2.0
+
+        jx = jax.make_jaxpr(bad)(jnp.zeros((4, 8), jnp.uint8))
+        out = CT.upcast_findings(jx, [0], "bad")
+        assert rules(out) == ["CT301"]
+
+    def test_ct301_bitwise_unpack_is_sanctioned(self):
+        def good(codes):
+            lo = (codes & 0x0F).astype(jnp.float32)
+            hi = (codes >> 4).astype(jnp.float32)
+            return lo + hi
+
+        jx = jax.make_jaxpr(good)(jnp.zeros((4, 8), jnp.uint8))
+        assert CT.upcast_findings(jx, [0], "good") == []
+
+    def test_ct301_taint_flows_through_layout_and_scan(self):
+        def bad(codes):
+            def body(carry, row):
+                return carry + row.astype(jnp.float32).sum(), None
+
+            r = codes.reshape(8, 4).T    # layout ops keep the taint
+            return jax.lax.scan(body, 0.0, r)[0]
+
+        jx = jax.make_jaxpr(bad)(jnp.zeros((4, 8), jnp.uint8))
+        assert rules(CT.upcast_findings(jx, [0], "bad")) == ["CT301"]
+
+    def test_ct302_debug_print_detected(self):
+        def noisy(x):
+            jax.debug.print("x={x}", x=x.sum())
+            return x * 2
+
+        jx = jax.make_jaxpr(noisy)(jnp.zeros((4,), jnp.float32))
+        out = CT.callback_findings(jx, "noisy")
+        assert out and all(f.rule == "CT302" for f in out)
+
+    def test_ct302_clean_fn(self):
+        jx = jax.make_jaxpr(lambda x: x * 2)(jnp.zeros((4,)))
+        assert CT.callback_findings(jx, "clean") == []
+
+    def test_repo_entry_points_hold_their_contracts(self):
+        out = CT.check_entry_points()
+        assert out == [], "\n".join(f.render() for f in out)
+
+
+# ---------------------------------------------------------------------------
+# layer 3: Pallas checker
+
+
+def _record_site(*, grid, in_spec, out_spec, out_shape, semantics,
+                 args, aliases=None):
+    from jax.experimental import pallas as pl  # noqa: F401
+
+    with PC.capture() as sites:
+        fn = compat.pallas_call(
+            lambda *refs: None,
+            grid=grid, in_specs=[in_spec], out_specs=out_spec,
+            out_shape=out_shape, dimension_semantics=semantics,
+            input_output_aliases=aliases or {})
+        fn(*args)
+    assert len(sites) == 1
+    return sites[0]
+
+
+class TestPallasChecker:
+    def test_seeded_write_race_detected(self):
+        from jax.experimental import pallas as pl
+
+        site = _record_site(
+            grid=(4,),
+            in_spec=pl.BlockSpec((8,), lambda i: (0,)),
+            out_spec=pl.BlockSpec((8,), lambda i: (0,)),  # all i -> block 0
+            out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+            semantics=("parallel",),
+            args=(jnp.zeros((8,), jnp.float32),))
+        out = PC.check_sites([site])
+        assert "PC201" in rules(out)
+
+    def test_sequential_accumulator_is_legal(self):
+        # the qmatmul k-loop / ssd_scan pattern: same output block
+        # revisited across an "arbitrary" dimension is NOT a race
+        from jax.experimental import pallas as pl
+
+        site = _record_site(
+            grid=(4,),
+            in_spec=pl.BlockSpec((8,), lambda i: (i,)),
+            out_spec=pl.BlockSpec((8,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+            semantics=("arbitrary",),
+            args=(jnp.zeros((32,), jnp.float32),))
+        assert PC.check_sites([site]) == []
+
+    def test_undeclared_semantics_assumed_parallel(self):
+        from jax.experimental import pallas as pl
+
+        site = _record_site(
+            grid=(2,),
+            in_spec=pl.BlockSpec((8,), lambda i: (i,)),
+            out_spec=pl.BlockSpec((8,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+            semantics=None,
+            args=(jnp.zeros((16,), jnp.float32),))
+        assert "PC201" in rules(PC.check_sites([site]))
+
+    def test_disjoint_writes_are_clean(self):
+        from jax.experimental import pallas as pl
+
+        site = _record_site(
+            grid=(4,),
+            in_spec=pl.BlockSpec((8,), lambda i: (i,)),
+            out_spec=pl.BlockSpec((8,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((32,), jnp.float32),
+            semantics=("parallel",),
+            args=(jnp.zeros((32,), jnp.float32),))
+        assert PC.check_sites([site]) == []
+
+    def test_vmem_overflow_detected(self):
+        from jax.experimental import pallas as pl
+
+        site = _record_site(
+            grid=(1,),
+            in_spec=pl.BlockSpec((1024,), lambda i: (0,)),
+            out_spec=pl.BlockSpec((1024,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((1024,), jnp.float32),
+            semantics=("arbitrary",),
+            args=(jnp.zeros((1024,), jnp.float32),))
+        out = PC.check_sites([site], vmem_budget=4096)  # 8 KiB needed
+        assert rules(out) == ["PC203"]
+
+    def test_unsound_alias_detected(self):
+        from jax.experimental import pallas as pl
+
+        site = _record_site(
+            grid=(1,),
+            in_spec=pl.BlockSpec((8,), lambda i: (0,)),
+            out_spec=pl.BlockSpec((8,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((8,), jnp.int32),
+            semantics=("arbitrary",),
+            args=(jnp.zeros((8,), jnp.float32),),   # f32 aliased to i32
+            aliases={0: 0})
+        assert "PC202" in rules(PC.check_sites([site]))
+
+    def test_ast_pass_sees_every_kernel_file(self):
+        import os
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        kdir = os.path.join(root, "src", "repro", "kernels")
+        sites = PC.pallas_call_sites([kdir])
+        files = {os.path.basename(p) for p, _, _ in sites}
+        assert files == {"flash_attention.py", "flash_decode.py",
+                         "probe_chase.py", "probe_dep_chain.py",
+                         "probe_mma.py", "qmatmul.py", "ssd_scan.py"}
+        assert len(sites) == 9
+
+    def test_repo_kernels_pass_and_are_fully_covered(self):
+        out = PC.check_kernels()
+        assert out == [], "\n".join(f.render() for f in out)
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizers
+
+
+class TestSanitizers:
+    def test_sync_counter_counts_host_reads(self):
+        x = jnp.arange(8.0)
+        with SAN.SyncCounter() as sc:
+            float(jnp.sum(x))
+            int(jnp.argmax(x))
+        assert sc.count >= 2
+
+    def test_compile_counter_sees_fresh_jit(self):
+        @jax.jit
+        def g(x):
+            return x * 3 + 1
+
+        x = jnp.arange(7.0)
+        jax.block_until_ready(x)            # arange has its own compile
+        with SAN.CompileCounter() as cc:
+            g(x).block_until_ready()
+        assert cc.count == 1
+        with SAN.CompileCounter() as cc2:
+            g(x).block_until_ready()        # cache hit
+        assert cc2.count == 0
+
+    def test_serving_hot_loop_is_sanitized(self):
+        """The ISSUE's acceptance check: the fused decode loop compiles
+        exactly once and performs zero implicit host transfers."""
+        rep = SAN.sanitize_serving(kv_format="float4_e2m1fn")
+        assert rep["compiled_exactly_once"], rep
+        assert rep["measured_compiles"] == 0, rep
+        assert rep["zero_implicit_loop_transfers"], rep
+        assert rep["measured_loop_syncs"] == 0, rep
+        assert rep["tokens_match_warmup"], rep
+        # the quant.py fix: one batched sync per tree, not 2 per leaf
+        assert rep["quantize_tree_leaves"] >= 4
+        assert rep["quantize_tree_syncs"] <= 2, (
+            "quantize_tree regressed to per-leaf host syncs: "
+            f"{rep['quantize_tree_syncs']} syncs for "
+            f"{rep['quantize_tree_leaves']} leaves")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+
+
+class TestCli:
+    def test_exit_codes(self, tmp_path, monkeypatch):
+        from tools import jaxlint as cli
+
+        clean = tmp_path / "clean.py"
+        clean.write_text("def helper(x):\n    return x\n")
+        assert cli.main([str(clean), "--no-baseline"]) == 0
+
+        dirty = tmp_path / "models" / "transformer.py"
+        dirty.parent.mkdir()
+        dirty.write_text(textwrap.dedent("""
+            def lm_decode_step(params, cache, tok):
+                if tok > 0:
+                    return cache
+                return None
+        """))
+        assert cli.main([str(dirty), "--no-baseline"]) == 1

@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""jaxlint — the repo's trace-safety gate (tier-1 CI).
+
+Usage:
+    python -m tools.jaxlint src benchmarks            # lint (gate mode)
+    python -m tools.jaxlint --write-baseline src ...  # (re)freeze baseline
+    python -m tools.jaxlint --no-baseline src ...     # show everything
+    python -m tools.jaxlint --contracts               # jaxpr contracts
+    python -m tools.jaxlint --pallas                  # Pallas checker
+    python -m tools.jaxlint --all src benchmarks      # lint + both
+
+Exit code 0 iff no finding survives pragmas + baseline.  Rules, pragma
+(`# jaxlint: disable=RULE(reason)`) and baseline semantics are
+documented in ``repro.analysis.lint`` and README "Static analysis &
+sanitizers".
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.join(_REPO, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+
+DEFAULT_BASELINE = os.path.join(_REPO, "tools", "jaxlint_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="jaxlint", description=__doc__)
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files/directories to lint (default: src "
+                         "benchmarks when run from the repo root)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the committed baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="freeze current findings as the new baseline")
+    ap.add_argument("--contracts", action="store_true",
+                    help="run the jaxpr contract checks (traces the "
+                         "tiny quantized model; needs jax)")
+    ap.add_argument("--pallas", action="store_true",
+                    help="run the Pallas write-race/alias/VMEM checker")
+    ap.add_argument("--all", action="store_true",
+                    help="lint + --contracts + --pallas")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids (e.g. JL101,JL103)")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import lint as L
+
+    findings = []
+    paths = args.paths
+    if not paths and not (args.contracts or args.pallas):
+        paths = [os.path.join(_REPO, "src"),
+                 os.path.join(_REPO, "benchmarks")]
+
+    if paths:
+        cfg = L.LintConfig()
+        if args.select:
+            cfg.select = set(args.select.split(","))
+        base = None if (args.no_baseline or args.write_baseline) \
+            else L.load_baseline(args.baseline)
+        lint_findings = L.lint_paths(paths, config=cfg, baseline=base,
+                                     root=_REPO)
+        if args.write_baseline:
+            L.write_baseline(args.baseline, lint_findings)
+            print(f"wrote {len(lint_findings)} finding(s) to "
+                  f"{os.path.relpath(args.baseline, _REPO)}")
+            return 0
+        findings += lint_findings
+
+    if args.contracts or args.all:
+        from repro.analysis import contracts
+        findings += contracts.check_entry_points()
+    if args.pallas or args.all:
+        from repro.analysis import pallas_check
+        findings += pallas_check.check_kernels()
+
+    for f in findings:
+        print(f.render())
+    n = len(findings)
+    parts = []
+    if paths:
+        parts.append(",".join(os.path.relpath(p, _REPO) for p in paths))
+    if args.contracts or args.all:
+        parts.append("contracts")
+    if args.pallas or args.all:
+        parts.append("pallas")
+    print(f"jaxlint: {n} finding(s) [{' + '.join(parts)}]")
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
