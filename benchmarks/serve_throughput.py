@@ -48,18 +48,28 @@ from repro.serve import ServeEngine
 def _drive(eng: ServeEngine, n_req: int, prompt_len: int,
            new_tokens: int) -> int:
     """Reset, enqueue, serve; returns generated-token count."""
+    import numpy as np
+
     eng.reset()
+    enc_dec = eng.model.cfg.is_encoder_decoder
+    d = eng.model.cfg.d_model
     for i in range(n_req):
+        frames = None
+        if enc_dec:
+            # deterministic per-request source frames (both legs must
+            # see bit-identical inputs for the greedy-identity gate)
+            frames = 0.02 * np.sin(
+                np.arange(6 * d, dtype=np.float32) + i).reshape(6, d)
         eng.submit([1 + (i + j) % 97 for j in range(prompt_len)],
-                   max_new_tokens=new_tokens)
+                   max_new_tokens=new_tokens, frames=frames)
     results = eng.run(max_steps=100_000)
     return sum(len(r.tokens) for r in results)
 
 
 def measure(quick: bool = False, kv_format: Optional[str] = None,
-            decode_block: int = 16) -> Dict:
+            decode_block: int = 16, arch: str = "gptneox-1b") -> Dict:
     """Both legs on one model; returns the artifact dict."""
-    cfg = get_config("gptneox-1b").reduced()
+    cfg = get_config(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     # quick mode still needs enough decode steps per drive for the
@@ -115,24 +125,37 @@ def measure(quick: bool = False, kv_format: Optional[str] = None,
 
 
 def run(quick: bool = False) -> BenchResult:
+    # one row per arch FAMILY through the same fused loop + chunked
+    # pooled prefill (attn / ssm / hybrid / enc-dec), plus the quantized
+    # KV leg on the attention arch
+    scenarios = [
+        ("attn", "gptneox-1b", None),
+        ("attn", "gptneox-1b", "float4_e2m1fn"),
+        ("ssm", "mamba2-2.7b", None),
+        ("hybrid", "jamba-v0.1-52b", None),
+        ("enc-dec", "seamless-m4t-medium", None),
+    ]
     rows, csv_rows, artifacts = [], [], []
-    for kv_format in (None, "float4_e2m1fn"):
-        art = measure(quick=quick, kv_format=kv_format)
+    for family, arch, kv_format in scenarios:
+        art = measure(quick=quick, kv_format=kv_format, arch=arch)
+        art["family"] = family
         artifacts.append(art)
-        rows.append([art["kv_format"],
+        rows.append([family, art["arch"], art["kv_format"],
                      f"{art['per_step']['tok_per_s']:.1f}",
                      f"{art['fused']['tok_per_s']:.1f}",
                      f"{art['speedup']:.2f}x",
                      "yes" if art["greedy_identical"] else "NO"])
         csv_rows.append(csv(
-            "serve_throughput", kv_format=art["kv_format"],
+            "serve_throughput", family=family, arch=art["arch"],
+            kv_format=art["kv_format"],
             tok_per_s_per_step=art["per_step"]["tok_per_s"],
             tok_per_s_fused=art["fused"]["tok_per_s"],
             decode_block=art["fused"]["decode_block"],
             speedup=art["speedup"],
             greedy_identical=int(art["greedy_identical"])))
-    md = table(["kv_format", "tok/s per-step", "tok/s fused (K=16)",
-                "speedup", "greedy identical"], rows)
+    md = table(["family", "arch", "kv_format", "tok/s per-step",
+                "tok/s fused (K=16)", "speedup", "greedy identical"],
+               rows)
     md += ("\nOne dispatch per K tokens instead of per token: the gap is "
            "pure dispatch/sync overhead, since both legs run the same "
            "jitted step body (the §IV.A overhead story applied to our "

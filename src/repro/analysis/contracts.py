@@ -247,11 +247,14 @@ def cache_width_findings(fn: Callable, args: Tuple[Any, ...], label: str,
 
 
 def check_entry_points(kv_format: str = "float4_e2m1fn") -> List[Finding]:
-    """Contract-check the serving hot paths on a tiny quantized config.
+    """Contract-check the serving hot paths on tiny quantized configs.
 
     Covers: ``lm_decode_step`` (via ``model.decode_step``), the fused
     ``decode_loop`` scan body, ``lm_prefill_chunk``, ``qmatmul_packed``,
-    ``flash_decode_quant``.  Pure tracing — nothing executes.
+    ``flash_decode_quant`` — on an attention arch AND on the hybrid
+    (SSM-state) and enc-dec (slot-resident ``enc_out`` + quantized
+    cross-KV, via ``lm_encode_slot``) families, which run the same
+    slot-state protocol.  Pure tracing — nothing executes.
     """
     import jax
     import jax.numpy as jnp
@@ -296,6 +299,59 @@ def check_entry_points(kv_format: str = "float4_e2m1fn") -> List[Finding]:
         model.prefill_chunk,
         (params, cache, chunk, jnp.int32(0), jnp.int32(0), jnp.int32(4)),
         "lm_prefill_chunk")
+
+    # Every arch family runs the SAME fused scan + chunked pooled
+    # prefill protocol now — trace the non-attention families through
+    # their own entry points (hybrid exercises the SSM conv/state
+    # leaves in the fused loop; enc-dec exercises slot-resident
+    # enc_out + quantized cross-KV).
+    hyb_cfg = dataclasses.replace(get_config("jamba-v0.1-52b").reduced(),
+                                  kv_format=kv_format)
+    hyb = build_model(hyb_cfg)
+    hyb_params = hyb.init(jax.random.PRNGKey(1))
+    hyb_cache = hyb.init_cache(batch, max_seq)
+    findings += contract_findings(
+        lambda p, c, t, q, a: hyb.decode_step(p, c, t, q, active=a),
+        (hyb_params, hyb_cache, token, pos, active),
+        "lm_decode_step[hybrid]")
+    findings += contract_findings(
+        hyb.prefill_chunk,
+        (hyb_params, hyb_cache, chunk, jnp.int32(0), jnp.int32(0),
+         jnp.int32(4)), "lm_prefill_chunk[hybrid]")
+    findings += cache_width_findings(
+        hyb.prefill_chunk,
+        (hyb_params, hyb_cache, chunk, jnp.int32(0), jnp.int32(0),
+         jnp.int32(4)), "lm_prefill_chunk[hybrid]")
+    hyb_eng = ServeEngine(hyb, hyb_params, batch=batch, max_seq=max_seq,
+                          decode_block=4)
+    findings += contract_findings(
+        hyb_eng._make_decode_loop(4),
+        (hyb_eng.params, hyb_eng.cache, hyb_eng.state,
+         hyb_eng._sample_key), "decode_loop[hybrid,k=4]")
+
+    enc_len = 16
+    ed_cfg = dataclasses.replace(
+        get_config("seamless-m4t-medium").reduced(), kv_format=kv_format)
+    ed = build_model(ed_cfg)
+    ed_params = ed.init(jax.random.PRNGKey(2))
+    ed_cache = ed.init_cache(batch, max_seq, enc_len=enc_len)
+    frames = jnp.zeros((1, enc_len, ed_cfg.d_model), jnp.float32)
+    findings += contract_findings(
+        ed.encode_slot,
+        (ed_params, ed_cache, frames, jnp.int32(0), jnp.int32(enc_len)),
+        "lm_encode_slot[enc-dec]")
+    findings += cache_width_findings(
+        ed.encode_slot,
+        (ed_params, ed_cache, frames, jnp.int32(0), jnp.int32(enc_len)),
+        "lm_encode_slot[enc-dec]", cache_out_index=0)
+    findings += contract_findings(
+        ed.prefill_chunk,
+        (ed_params, ed_cache, chunk, jnp.int32(0), jnp.int32(0),
+         jnp.int32(4)), "lm_prefill_chunk[enc-dec]")
+    findings += contract_findings(
+        lambda p, c, t, q, a: ed.decode_step(p, c, t, q, active=a),
+        (ed_params, ed_cache, token, pos, active),
+        "lm_decode_step[enc-dec]")
 
     x = jnp.zeros((8, 64), jnp.float32)
     pw = jnp.zeros((128, 64 // 2), jnp.uint8)      # fp4: 2 values/byte

@@ -107,12 +107,17 @@ _CLOCK_MODULES = {
 DEFAULT_TRACED_ROOTS: Dict[str, Set[str]] = {
     "models/transformer.py": {
         "lm_decode_step", "lm_prefill_chunk", "lm_prefill", "lm_forward",
-        "lm_features", "clear_slot", "kv_cache_stats",
+        "lm_features", "lm_encode_slot", "clear_slot", "kv_cache_stats",
     },
     "models/attention.py": {
         "decode_attention", "cache_attention", "cache_kv", "quantize_kv",
         "dequantize_kv",
     },
+    "models/slotstate.py": {
+        "mask_rows", "masked_tree", "decode_advance", "take_row",
+        "put_row", "clear_slot",
+    },
+    "models/ssm.py": {"ssm_prefill_chunk"},
     "serve/quant.py": {"quantize_blockwise", "dequantize_blockwise"},
     "serve/sampler.py": {"sample_token", "sample_tokens",
                          "fold_slot_keys"},

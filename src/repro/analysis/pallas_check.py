@@ -436,11 +436,15 @@ def _repo_driver_sites() -> List[PallasSite]:
         pw = jnp.zeros((128, 64 // 2), jnp.uint8)
         qmatmul.qmatmul_packed_mkn(x, pw, sc, "float4_e2m1fn", bm=64, bn=64, bk=32)
 
-        # ssd scan (sequential chunk axis + last-chunk state emission)
+        # ssd scan (sequential chunk axis + last-chunk state emission),
+        # fresh AND carried-state entry (the chunked-prefill seed adds a
+        # (1,1,p,n) broadcast-read input block — check both signatures)
         xs = jnp.zeros((2, 2, 8, 4), jnp.float32)
         da = jnp.zeros((2, 2, 8), jnp.float32)
         bc = jnp.zeros((2, 8, 4), jnp.float32)
         ssd_scan.ssd_scan_bhsp(xs, da, bc, bc, chunk=4)
+        h0 = jnp.zeros((2, 2, 4, 4), jnp.float32)
+        ssd_scan.ssd_scan_bhsp(xs, da, bc, bc, chunk=4, initial_state=h0)
 
         # probes
         probe_mma.mma_probe(jnp.zeros((1, 8, 8), jnp.float32),

@@ -130,12 +130,20 @@ def _engine_executables(eng) -> Dict[str, Any]:
     fns["prefill_chunk"] = eng._prefill_chunk_fn
     fns["admit"] = eng._admit_fn
     fns["clear_slot"] = eng._clear_slot_fn
+    # arch-conditional admission executables (enc-dec encode, VLM
+    # embed-chunk) — present iff the engine serves that family
+    if hasattr(eng, "_encode_slot_fn"):
+        fns["encode_slot"] = eng._encode_slot_fn
+    if hasattr(eng, "_prefill_embeds_fn"):
+        fns["prefill_embeds"] = eng._prefill_embeds_fn
     return fns
 
 
-def _drive(eng, prompts, max_new: int, k: int, loops: int):
-    for p in prompts:
-        eng.submit(p, max_new_tokens=max_new)
+def _drive(eng, prompts, max_new: int, k: int, loops: int,
+           frames=None):
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=max_new,
+                   frames=None if frames is None else frames[i])
     eng._admit()                 # prefill + first-token sampling (syncs
     # here are per-admission and expected; the measured region below is
     # the pure fused loop)
@@ -148,22 +156,29 @@ def _drive(eng, prompts, max_new: int, k: int, loops: int):
 
 
 def sanitize_serving(kv_format: Optional[str] = None,
-                     weight_format: Optional[str] = None) -> Dict:
+                     weight_format: Optional[str] = None,
+                     arch: str = "gptneox-1b") -> Dict:
     """Scripted serving scenario under the full sanitizer stack.
 
     Two passes of the same script: a warm-up pass that is *allowed* to
     compile, then a measured pass (after ``reset()``, which keeps the
     executables) in which every compile and every implicit sync is a
-    finding.  Returns a report dict; the tier-1 test asserts on it.
+    finding.  ``arch`` selects the family — every arch runs the same
+    fused loop + chunked prefill protocol, so the SSM (``mamba2-2.7b``)
+    and enc-dec (``seamless-m4t-medium``) scenarios assert the identical
+    compile-once / zero-sync discipline, including the enc-dec
+    ``encode_slot`` admission executable.  Returns a report dict; the
+    tier-1 test asserts on it.
     """
     import jax
+    import numpy as np
 
     from repro.configs import get_config
     from repro.models import build_model
     from repro.serve.engine import ServeEngine
     from repro.serve.quant import quantize_tree
 
-    cfg = get_config("gptneox-1b").reduced()
+    cfg = get_config(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
@@ -171,15 +186,24 @@ def sanitize_serving(kv_format: Optional[str] = None,
     prompts = [[1, 2, 3, 4], [5, 6, 7, 8]]
     max_new = 1 + k * loops          # admit token + exactly `loops` K-blocks
 
+    frames = None
+    if cfg.is_encoder_decoder:
+        # deterministic per-request source frames (warm/measured token
+        # match requires bit-identical inputs across the two passes)
+        frames = [0.02 * np.sin(np.arange(6 * cfg.d_model, dtype=np.float32)
+                                + i).reshape(6, cfg.d_model)
+                  for i in range(len(prompts))]
+
     eng = ServeEngine(model, params, batch=2, max_seq=64,
                       kv_format=kv_format, weight_format=weight_format,
                       decode_block=k, prefill_chunk=4)
 
-    warm_results, _, warm_compiles = _drive(eng, prompts, max_new, k, loops)
+    warm_results, _, warm_compiles = _drive(eng, prompts, max_new, k,
+                                            loops, frames=frames)
 
     eng.reset()
     results, loop_syncs, loop_compiles = _drive(
-        eng, prompts, max_new, k, loops)
+        eng, prompts, max_new, k, loops, frames=frames)
 
     cache_sizes = jit_cache_sizes(_engine_executables(eng))
 
@@ -190,6 +214,7 @@ def sanitize_serving(kv_format: Optional[str] = None,
     n_leaves = len(jax.tree_util.tree_leaves(params))
 
     report = {
+        "arch": arch,
         "kv_format": kv_format or "none",
         "warm_compiles": warm_compiles,
         "measured_compiles": loop_compiles,

@@ -85,6 +85,14 @@ class ArchConfig:
                                   # e8m0 block scales, (de)quantized in
                                   # the cache write/read paths.  "" =
                                   # plain cast storage per cache_dtype.
+    kv_formats: Tuple[str, ...] = ()   # per-POSITION-IN-PERIOD override of
+                                  # kv_format (mixed-precision KV: e.g.
+                                  # fp8 on global-attention layers, fp4
+                                  # on sliding-window locals).  Length
+                                  # must equal the block period; "" at a
+                                  # position falls back to kv_format.
+                                  # Applies to self- AND cross-attention
+                                  # KV of that position.
     attn_chunk: int = 1024        # online-softmax KV block (XLA path)
     attn_repeat_kv: bool = False  # materialize KV at full q-head count:
                                   # the (hq)->(hkv, g) grouping reshape is
@@ -128,6 +136,22 @@ class ArchConfig:
     @property
     def expert_d_ff(self) -> int:
         return self.moe_d_ff or self.d_ff
+
+    def kv_format_for(self, pos_in_period: int) -> Optional[str]:
+        """Effective KV format for one position-in-period (None = plain).
+
+        ``kv_formats`` (per-layer mixed precision) wins over the uniform
+        ``kv_format``; empty strings in either mean unquantized storage.
+        """
+        if self.kv_formats:
+            assert len(self.kv_formats) == len(self.block_pattern()), (
+                f"{self.name}: kv_formats has {len(self.kv_formats)} "
+                f"entries but the block period is "
+                f"{len(self.block_pattern())}")
+            fmt = self.kv_formats[pos_in_period] or self.kv_format
+        else:
+            fmt = self.kv_format
+        return fmt or None
 
     def block_pattern(self) -> List[BlockSpec]:
         """One period of the layer stack (see module docstring)."""

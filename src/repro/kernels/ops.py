@@ -105,9 +105,13 @@ def flash_decode_quant(q: jax.Array, kv_cache: dict, pos: jax.Array, *,
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def ssd_scan(x: jax.Array, dt_a: jax.Array, b: jax.Array, c: jax.Array,
-             chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
+             chunk: int = 256,
+             initial_state: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
     """Model-layout SSD: x (bt, s, h, p) pre-discretized (x*dt),
     dt_a (bt, s, h), b/c (bt, s, n).  Pads s to the chunk (identity tail).
+    ``initial_state`` (bt, h, p, n) seeds the scan (zeros when omitted) —
+    the chunked-prefill carry between a slot's successive chunks.
     Returns (y (bt, s, h, p), final_state (bt, h, p, n))."""
     bt, s, h, p = x.shape
     pad = (-s) % chunk
@@ -118,7 +122,8 @@ def ssd_scan(x: jax.Array, dt_a: jax.Array, b: jax.Array, c: jax.Array,
         c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
     y, state = _ssd.ssd_scan_bhsp(
         x.transpose(0, 2, 1, 3), dt_a.transpose(0, 2, 1),
-        b, c, chunk=chunk, interpret=_interpret())
+        b, c, chunk=chunk, initial_state=initial_state,
+        interpret=_interpret())
     y = y.transpose(0, 2, 1, 3)
     return (y[:, :s] if pad else y), state
 

@@ -22,13 +22,15 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def ssd_ref(x: jax.Array, dt_a: jax.Array, b: jax.Array, c: jax.Array,
-            sequential: bool = False
+            sequential: bool = False,
+            initial_state: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, jax.Array]:
     """Chunk-parallel (default) or strictly-sequential SSD oracle.
-    Model layout: x (bt, s, h, p)."""
+    Model layout: x (bt, s, h, p); optional carried state (bt, h, p, n)."""
     if sequential:
-        return ssd_reference(x, dt_a, b, c)
-    return ssd_chunked(x, dt_a, b, c, chunk=min(64, x.shape[1]))
+        return ssd_reference(x, dt_a, b, c, initial_state=initial_state)
+    return ssd_chunked(x, dt_a, b, c, chunk=min(64, x.shape[1]),
+                       initial_state=initial_state)
 
 
 def qmatmul_ref(x: jax.Array, qw: jax.Array, scales: jax.Array

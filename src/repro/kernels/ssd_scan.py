@@ -25,14 +25,16 @@ from jax.experimental.pallas import tpu as pltpu
 from repro import compat
 
 
-def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_ref, s_scr, *,
-            q: int):
+def _kernel(x_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, state_ref, s_scr,
+            *, q: int):
     ci = pl.program_id(2)
     nc = pl.num_programs(2)
 
     @pl.when(ci == 0)
     def _init():
-        s_scr[...] = jnp.zeros_like(s_scr)
+        # seed the running state from the caller's carry (zeros for a
+        # fresh sequence; a slot's cached state for chunked prefill)
+        s_scr[...] = h0_ref[0, 0].astype(jnp.float32)
 
     x = x_ref[0, 0].astype(jnp.float32)               # (q, p)
     a = a_ref[0, 0].astype(jnp.float32)               # (q,)
@@ -68,8 +70,11 @@ def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_ref, s_scr, *,
 
 def ssd_scan_bhsp(x_disc: jax.Array, dt_a: jax.Array, b: jax.Array,
                   c: jax.Array, chunk: int = 256,
+                  initial_state: Optional[jax.Array] = None,
                   interpret: Optional[bool] = None):
-    """x_disc (bt, h, s, p) = x*dt;  dt_a (bt, h, s);  b, c (bt, s, n).
+    """x_disc (bt, h, s, p) = x*dt;  dt_a (bt, h, s);  b, c (bt, s, n);
+    optional initial_state (bt, h, p, n) carried into chunk 0 (zeros when
+    omitted — a fresh sequence).
 
     Returns (y (bt, h, s, p) at x dtype, final_state (bt, h, p, n) fp32).
     s must be a multiple of ``chunk`` (ops pads identically to the jnp
@@ -78,6 +83,9 @@ def ssd_scan_bhsp(x_disc: jax.Array, dt_a: jax.Array, b: jax.Array,
     bt, h, s, p = x_disc.shape
     n = b.shape[-1]
     assert s % chunk == 0, (s, chunk)
+    h0 = (jnp.zeros((bt, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    assert h0.shape == (bt, h, p, n), (h0.shape, (bt, h, p, n))
     kernel = functools.partial(_kernel, q=chunk)
     y, state = compat.pallas_call(
         kernel,
@@ -87,6 +95,7 @@ def ssd_scan_bhsp(x_disc: jax.Array, dt_a: jax.Array, b: jax.Array,
             pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
             pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
             pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
@@ -99,5 +108,5 @@ def ssd_scan_bhsp(x_disc: jax.Array, dt_a: jax.Array, b: jax.Array,
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
         dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
-    )(x_disc, dt_a, b, c)
+    )(x_disc, dt_a, b, c, h0)
     return y, state

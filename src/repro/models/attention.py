@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from repro import compat, lowbits
 from repro.configs.base import ArchConfig
 from repro.models.layers import apply_rope, dense_init
+from repro.models.slotstate import mask_rows  # noqa: F401 — re-export;
+# the per-slot write discipline lives in repro.models.slotstate now
 
 _NEG_INF = -1.0e30
 
@@ -118,10 +120,13 @@ def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                    softcap: Optional[float] = None,
                    scale: Optional[float] = None,
                    q_positions: Optional[jax.Array] = None,
-                   k_positions: Optional[jax.Array] = None) -> jax.Array:
+                   k_positions: Optional[jax.Array] = None,
+                   k_valid: Optional[jax.Array] = None) -> jax.Array:
     """Reference O(sq*sk)-memory attention (oracle + short-seq path).
 
     q: (b, sq, hq, d); k, v: (b, sk, hkv, d).  Returns (b, sq, hq, d).
+    ``k_valid`` (b, sk) bool masks per-row key padding (pooled encoder
+    batches pad frames to a fixed enc_len).
     """
     b, sq, hq, d = q.shape
     sk, hkv = k.shape[1], k.shape[2]
@@ -131,6 +136,8 @@ def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     q_pos = jnp.arange(sq) if q_positions is None else q_positions
     k_pos = jnp.arange(sk) if k_positions is None else k_positions
     s = s + _mask_bias(q_pos, k_pos, causal, window)
+    if k_valid is not None:
+        s = jnp.where(k_valid[:, None, None, None, :], s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
                    preferred_element_type=jnp.float32)
@@ -141,7 +148,8 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       causal: bool = True, window: Optional[int] = None,
                       softcap: Optional[float] = None,
                       scale: Optional[float] = None,
-                      chunk: int = 1024) -> jax.Array:
+                      chunk: int = 1024,
+                      k_valid: Optional[jax.Array] = None) -> jax.Array:
     """Flash-equivalent attention: ``lax.scan`` over KV chunks with online
     softmax.  O(sq * chunk) live memory instead of O(sq * sk).
 
@@ -156,9 +164,13 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         pad = chunk - sk % chunk
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if k_valid is not None:
+            k_valid = jnp.pad(k_valid, ((0, 0), (0, pad)))
         sk_pad = sk + pad
     else:
         sk_pad = sk
+    if k_valid is None:
+        k_valid = jnp.ones((b, sk_pad), bool)
     n_chunks = sk_pad // chunk
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     g = hq // hkv
@@ -167,16 +179,18 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     kc = k.reshape(b, n_chunks, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
     vc = v.reshape(b, n_chunks, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    kvc = k_valid.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
 
     def step(carry, inputs):
         m, l, acc = carry
-        ci, k_i, v_i = inputs
+        ci, k_i, v_i, kv_i = inputs
         k_pos = ci * chunk + jnp.arange(chunk)
         s = _scores(qg, k_i, scale, softcap)          # (b,h,g,sq,chunk)
         valid = k_pos < sk                            # mask padding
         bias = _mask_bias(q_pos, k_pos, causal, window)
         bias = jnp.where(valid[None, :], bias, _NEG_INF)
         s = s + bias
+        s = jnp.where(kv_i[:, None, None, None, :], s, _NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         corr = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -190,20 +204,21 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
     acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(
-        step, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
+        step, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc, kvc))
     l = jnp.where(l == 0.0, 1.0, l)
     o = (acc / l[..., None]).transpose(0, 3, 1, 2, 4)  # (b,sq,h,g,d)
     return o.reshape(b, sq, hq, d).astype(q.dtype)
 
 
 def attention(q, k, v, *, causal=True, window=None, softcap=None,
-              scale=None, chunk: int = 1024):
+              scale=None, chunk: int = 1024, k_valid=None):
     """Dispatch: chunked when the KV axis is long enough to matter."""
     if k.shape[1] <= chunk:
         return full_attention(q, k, v, causal=causal, window=window,
-                              softcap=softcap, scale=scale)
+                              softcap=softcap, scale=scale, k_valid=k_valid)
     return chunked_attention(q, k, v, causal=causal, window=window,
-                             softcap=softcap, scale=scale, chunk=chunk)
+                             softcap=softcap, scale=scale, chunk=chunk,
+                             k_valid=k_valid)
 
 
 # --------------------------------------------------------------------- #
@@ -375,15 +390,6 @@ def cache_kv(cache: dict, kv_format: Optional[str], head_dim: int,
     v = dequantize_kv(cache["v_q"], cache["v_s"], kv_format, head_dim,
                       out_dtype)
     return k, v
-
-
-def mask_rows(mask: Optional[jax.Array], new: jax.Array,
-                old: jax.Array) -> jax.Array:
-    """Select ``new`` where ``mask`` (leading-dims bool) else ``old``."""
-    if mask is None:
-        return new
-    m = mask.reshape(mask.shape + (1,) * (new.ndim - mask.ndim))
-    return jnp.where(m, new, old)
 
 
 def cache_write_decode(cache: dict, k: jax.Array, v: jax.Array,

@@ -17,8 +17,9 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models.transformer import (
     VLM_PATCHES, clear_slot, init_cache, init_lm, kv_cache_stats,
-    lm_decode_step, lm_features, lm_forward, lm_prefill, lm_prefill_chunk,
-    min_cache_capacity, supports_chunked_prefill, unembed_weight)
+    lm_decode_step, lm_encode_slot, lm_features, lm_forward, lm_prefill,
+    lm_prefill_chunk, min_cache_capacity, supports_chunked_prefill,
+    unembed_weight)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,9 +52,17 @@ class Model:
     # -- serving hot-path API (fused loop / chunked pooled prefill) --- #
     def prefill_chunk(self, params: dict, cache: dict, tokens: jax.Array,
                       slot: jax.Array, pos_offset: jax.Array,
-                      valid_len: jax.Array):
+                      valid_len: jax.Array,
+                      embeds: Optional[jax.Array] = None):
         return lm_prefill_chunk(params, cache, tokens, slot, pos_offset,
-                                valid_len, self.cfg)
+                                valid_len, self.cfg, embeds=embeds)
+
+    def encode_slot(self, params: dict, cache: dict, frames: jax.Array,
+                    slot: jax.Array, src_len: jax.Array) -> dict:
+        """Encode one request's frames into slot-resident enc_out +
+        cross-KV (see ``repro.models.transformer.lm_encode_slot``)."""
+        return lm_encode_slot(params, cache, frames, slot, src_len,
+                              self.cfg)
 
     def clear_slot(self, cache: dict, slot: jax.Array) -> dict:
         return clear_slot(cache, slot)

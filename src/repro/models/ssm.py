@@ -211,6 +211,72 @@ def ssm_forward(p: dict, x: jax.Array, cfg: ArchConfig,
     return out
 
 
+def ssm_prefill_chunk(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig,
+                      valid: jax.Array, valid_len: jax.Array
+                      ) -> Tuple[jax.Array, dict]:
+    """One prompt *chunk* through the SSD block with state carried across
+    chunk boundaries — the SSM leg of chunked pooled prefill.
+
+    x: (bt, s, d_model) chunk activations (zero-padded past ``valid_len``);
+    cache: this slot's ``{"conv", "state"}`` row (bt matches x);
+    valid: (s,) bool prefix mask; valid_len: traced scalar int32.
+    Returns (out (bt, s, d_model), advanced cache row).
+
+    Exactness: the depthwise convs run over ``[carried conv inputs | this
+    chunk's raw inputs]`` and drop the first k-1 outputs, so every kept
+    window lies entirely inside real inputs (the zero left-pad of
+    ``causal_conv1d`` never reaches them); invalid tail positions are
+    identity steps for the recurrence (decay 1, input 0), so the final
+    state equals the full-sequence scan's state at ``valid_len`` exactly
+    up to chunk-boundary float association (``ssd_chunked`` carries
+    ``initial_state``).  Outputs at invalid positions are garbage and
+    must not be read.
+    """
+    bt, s, _ = x.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_in = cfg.d_inner
+    k1 = cfg.ssm_conv - 1
+    z, xr, br, cr, dt_raw = _project(p, x)
+    raw = jnp.concatenate([xr, br, cr], axis=-1)          # (bt, s, C)
+    full = jnp.concatenate([cache["conv"].astype(raw.dtype), raw], axis=1)
+    fx, fb, fc = full[..., :d_in], full[..., d_in:d_in + n], \
+        full[..., d_in + n:]
+    xh = jax.nn.silu(causal_conv1d(fx, p["conv_x_w"], p["conv_x_b"])[:, k1:])
+    b_ = jax.nn.silu(causal_conv1d(fb, p["conv_b_w"], p["conv_b_b"])[:, k1:])
+    c_ = jax.nn.silu(causal_conv1d(fc, p["conv_c_w"], p["conv_c_b"])[:, k1:])
+    xh = xh.reshape(bt, s, h, pd)
+    dt, dt_a = _discretize(p, dt_raw)
+    vm = valid[None, :]                                   # (1, s)
+    # identity steps past valid_len: decay 1, input 0 — the state at the
+    # chunk end is the state at valid_len
+    x_disc = jnp.where(vm[..., None, None], xh * dt[..., None], 0.0)
+    dt_a = jnp.where(vm[..., None], dt_a, 0.0)
+    b_c = jnp.where(vm[..., None], b_, 0.0)
+    c_c = c_
+    chunk = min(cfg.ssm_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x_disc = jnp.pad(x_disc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_a = jnp.pad(dt_a, ((0, 0), (0, pad), (0, 0)))
+        b_c = jnp.pad(b_c, ((0, 0), (0, pad), (0, 0)))
+        c_c = jnp.pad(c_c, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_chunked(x_disc, dt_a, b_c, c_c, chunk,
+                           initial_state=cache["state"])
+    y = y[:, :s]
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)      # per-head skip
+    y = y.reshape(bt, s, h * pd).astype(x.dtype)
+    y = rms_norm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    # carried conv inputs: the k-1 raw rows ending at valid_len.  In
+    # ``full`` indexing the chunk's raw row j sits at k1 + j, so rows
+    # [valid_len, valid_len + k1) are raw[valid_len - k1 : valid_len]
+    # (reaching into the previous carry when valid_len < k1) — a traced
+    # start with a static size.
+    new_conv = jax.lax.dynamic_slice_in_dim(full, valid_len, k1, axis=1)
+    return out, {"conv": new_conv.astype(cache["conv"].dtype),
+                 "state": state}
+
+
 def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
     conv_dim = cfg.d_inner + 2 * cfg.ssm_state
     return {

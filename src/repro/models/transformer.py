@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, BlockSpec
 from repro.models import attention as attn
 from repro.models import moe as moe_lib
+from repro.models import slotstate
 from repro.models import ssm as ssm_lib
 from repro.models.layers import (
     apply_mlp, dense_init, embed, init_mlp, init_rms_norm, rms_norm, unembed)
@@ -86,7 +87,8 @@ def init_block(key: jax.Array, cfg: ArchConfig, blk: BlockSpec, dtype
 
 def _self_attention_train(p, x, cfg: ArchConfig, blk: BlockSpec,
                           causal: bool = True,
-                          return_kv: bool = False):
+                          return_kv: bool = False,
+                          k_valid: Optional[jax.Array] = None):
     positions = jnp.arange(x.shape[1])
     q = attn.project_q(p, x)
     k, v = attn.project_kv(p, x)
@@ -108,7 +110,7 @@ def _self_attention_train(p, x, cfg: ArchConfig, blk: BlockSpec,
             q, P(b_ax, "model", None, None))
     o = attn.attention(q, ka, va, causal=causal, window=blk.window,
                        softcap=cfg.attn_logit_softcap,
-                       chunk=cfg.attn_chunk)
+                       chunk=cfg.attn_chunk, k_valid=k_valid)
     if cfg.attn_seq_shard and cfg.batch_axes:
         from jax.sharding import PartitionSpec as P
         b_ax = cfg.batch_axes[0] if len(cfg.batch_axes) == 1 \
@@ -123,13 +125,19 @@ def _self_attention_train(p, x, cfg: ArchConfig, blk: BlockSpec,
 
 def apply_block(p: dict, blk: BlockSpec, cfg: ArchConfig, x: jax.Array,
                 enc_out: Optional[jax.Array] = None,
-                causal: bool = True) -> Tuple[jax.Array, dict]:
-    """Full-sequence block (training / scoring).  Returns (x, aux)."""
+                causal: bool = True,
+                k_valid: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, dict]:
+    """Full-sequence block (training / scoring).  Returns (x, aux).
+
+    ``k_valid`` (b, s) masks padded key positions in self-attention
+    (pooled encoder batches pad frames to a fixed enc_len)."""
     aux: Dict[str, jax.Array] = {}
     x = _shard_batch(x, cfg)
     if blk.mixer == "attn":
         h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
-        x = x + _self_attention_train(p["attn"], h, cfg, blk, causal=causal)
+        x = x + _self_attention_train(p["attn"], h, cfg, blk, causal=causal,
+                                      k_valid=k_valid)
         if blk.cross_attn and enc_out is not None:
             h = rms_norm(p["ln_cross"], x, cfg.norm_eps)
             q = attn.project_q(p["cross"], h)
@@ -201,13 +209,19 @@ def _remat_wrap(fn, cfg: ArchConfig):
 # Encoder (enc-dec archs)
 # --------------------------------------------------------------------- #
 
-def encode(params: dict, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
-    """Bidirectional encoder over frontend embeddings (b, s_src, d)."""
+def encode(params: dict, frames: jax.Array, cfg: ArchConfig,
+           valid: Optional[jax.Array] = None) -> jax.Array:
+    """Bidirectional encoder over frontend embeddings (b, s_src, d).
+
+    ``valid`` (b, s_src) bool masks padded frames out of every
+    self-attention (outputs at padded positions are garbage and must be
+    masked by the caller)."""
     enc_blk = BlockSpec(mixer="attn", ffn="dense")
     x = frames.astype(jnp.dtype(cfg.compute_dtype))
 
     def layer_fn(x, layer_params):
-        x, _ = apply_block(layer_params, enc_blk, cfg, x, causal=False)
+        x, _ = apply_block(layer_params, enc_blk, cfg, x, causal=False,
+                           k_valid=valid)
         return x, None
 
     x, _ = jax.lax.scan(_remat_wrap(layer_fn, cfg), x,
@@ -284,17 +298,21 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
     §VII.B serving-precision lever applied to the cache.
     ``cfg.kv_format`` goes further: truly *quantized* KV storage
     (packed fp8/fp4 codes + 1-byte e8m0 block scales; fp4 ≈ 0.53 B/elem
-    measured vs 2 B/elem bf16 — the §VI.D read-bandwidth lever).  SSM
-    conv/state stay at compute/fp32 precision (tiny, and the recurrence
-    compounds rounding)."""
+    measured vs 2 B/elem bf16 — the §VI.D read-bandwidth lever), and
+    ``cfg.kv_formats`` mixes formats per position-in-period (fp8 global /
+    fp4 local layers).  Cross-attention KV is a ring cache of the same
+    layout (capacity = enc_len, slot_pos marks valid source positions),
+    so it quantizes — and is evicted/cleared — exactly like self-attn KV.
+    SSM conv/state stay at compute/fp32 precision (tiny, and the
+    recurrence compounds rounding)."""
     dtype = jnp.dtype(cfg.compute_dtype)
     kv_dtype = jnp.dtype(cfg.cache_dtype or cfg.compute_dtype)
-    kv_fmt = cfg.kv_format or None
     pattern = cfg.block_pattern()
     n_p = cfg.n_periods
     cache: dict = {}
     for i, blk in enumerate(pattern):
         entry: dict = {}
+        kv_fmt = cfg.kv_format_for(i)
         if blk.mixer == "attn":
             cap = attn.cache_capacity(max_seq, blk.window)
             kv = attn.init_kv_cache(batch, cap, cfg.n_kv_heads,
@@ -303,9 +321,11 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
             entry["kv"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (n_p,) + a.shape), kv)
             if blk.cross_attn:
-                z = jnp.zeros((n_p, batch, enc_len, cfg.n_kv_heads,
-                               cfg.head_dim), dtype)
-                entry["cross_kv"] = {"k": z, "v": z}
+                ckv = attn.init_kv_cache(batch, enc_len, cfg.n_kv_heads,
+                                         cfg.head_dim, kv_dtype,
+                                         kv_format=kv_fmt)
+                entry["cross_kv"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (n_p,) + a.shape), ckv)
         elif blk.mixer == "ssm":
             sc = ssm_lib.init_ssm_cache(cfg, batch, dtype)
             entry["ssm"] = jax.tree.map(
@@ -319,33 +339,60 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
 def kv_cache_stats(cache: dict, cfg: ArchConfig) -> dict:
     """*Measured* attention-KV storage accounting over a cache pytree.
 
-    Walks the ``pos*``/``kv`` entries (cross-attn KV, SSM state, and the
-    int32 ``slot_pos`` bookkeeping are excluded — they are format-
-    independent) and reports ``sum(arr.nbytes)`` over what is actually
-    stored, the number the Tab VIII / long-context artifacts quote:
+    Walks the ``pos*`` entries' ``kv`` AND ``cross_kv`` ring caches (SSM
+    state and the int32 ``slot_pos`` bookkeeping are excluded — they are
+    format-independent) and reports ``sum(arr.nbytes)`` over what is
+    actually stored, the number the Tab VIII / long-context artifacts
+    quote:
 
       * ``kv_bytes``        — total stored K/V payload (codes + scales),
+        self- and cross-attention combined,
+      * ``cross_kv_bytes``  — the cross-attention share of ``kv_bytes``
+        (0 for decoder-only archs),
       * ``bytes_per_elem``  — payload / logical K,V element count (fp4 +
         e8m0 byte scales ≈ 0.53 at head_dim 128; 2.0 for bf16),
-      * ``bytes_per_token`` — HBM bytes one cached token position costs
-        across the whole layer stack (what each decoded token *reads*
-        per position of context, and *writes* once).
+      * ``bytes_per_token`` — HBM bytes one cached *decoder* token
+        position costs across the layer stack (what each decoded token
+        reads per position of context, and writes once; cross-KV is
+        per-source-position, not per-decoded-token, so it is reported
+        in ``cross_kv_bytes`` instead),
+      * ``per_layer``       — {pos name: {format, bytes_per_elem}}
+        measured per position-in-period (mixed ``kv_formats`` show
+        their different widths here).
     """
-    kv_bytes, elems, per_token = 0, 0, 0.0
+    kv_bytes, cross_bytes, elems, per_token = 0, 0, 0, 0.0
+    per_layer: dict = {}
     for name, entry in cache.items():
-        if not name.startswith("pos") or "kv" not in entry:
+        if not name.startswith("pos"):
             continue
-        kv = entry["kv"]
-        n_p, b, cap = kv["slot_pos"].shape
-        payload = sum(v.nbytes for k2, v in kv.items() if k2 != "slot_pos")
-        kv_bytes += payload
-        elems += 2 * n_p * b * cap * cfg.n_kv_heads * cfg.head_dim
-        per_token += payload / (b * cap)
+        i = int(name[3:])
+        for part in ("kv", "cross_kv"):
+            if part not in entry:
+                continue
+            kv = entry[part]
+            n_p, b, cap = kv["slot_pos"].shape
+            payload = sum(v.nbytes for k2, v in kv.items()
+                          if k2 != "slot_pos")
+            part_elems = 2 * n_p * b * cap * cfg.n_kv_heads * cfg.head_dim
+            kv_bytes += payload
+            elems += part_elems
+            if part == "kv":
+                per_token += payload / (b * cap)
+            else:
+                cross_bytes += payload
+            key = name if part == "kv" else f"{name}.cross"
+            per_layer[key] = {
+                "format": cfg.kv_format_for(i)
+                or (cfg.cache_dtype or cfg.compute_dtype),
+                "bytes_per_elem": payload / part_elems,
+            }
     return {"kv_format": cfg.kv_format or (cfg.cache_dtype
                                            or cfg.compute_dtype),
             "kv_bytes": int(kv_bytes),
+            "cross_kv_bytes": int(cross_bytes),
             "bytes_per_elem": kv_bytes / elems if elems else 0.0,
-            "bytes_per_token": per_token}
+            "bytes_per_token": per_token,
+            "per_layer": per_layer}
 
 
 def lm_prefill(params: dict, batch: Dict[str, jax.Array], cfg: ArchConfig,
@@ -365,13 +412,13 @@ def lm_prefill(params: dict, batch: Dict[str, jax.Array], cfg: ArchConfig,
             x = _shard_batch(x, cfg)
             p = period_params[f"pos{i}"]
             entry = {}
+            kv_fmt = cfg.kv_format_for(i)
             if blk.mixer == "attn":
                 h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
                 out, (k, v) = _self_attention_train(
                     p["attn"], h, cfg, blk, return_kv=True)
                 x = x + out
                 cap = attn.cache_capacity(max_seq, blk.window)
-                kv_fmt = cfg.kv_format or None
                 kv0 = attn.init_kv_cache(x.shape[0], cap, cfg.n_kv_heads,
                                          cfg.head_dim, k.dtype,
                                          kv_format=kv_fmt)
@@ -381,9 +428,21 @@ def lm_prefill(params: dict, batch: Dict[str, jax.Array], cfg: ArchConfig,
                     h = rms_norm(p["ln_cross"], x, cfg.norm_eps)
                     q = attn.project_q(p["cross"], h)
                     ck, cv = attn.project_kv(p["cross"], enc_out)
-                    o = attn.attention(q, ck, cv, causal=False)
+                    # cross-KV is a ring cache like self-attn KV:
+                    # quantize-on-write (kv_fmt), slot_pos = source
+                    # positions; the prompt attends the CACHED view so
+                    # prefill, chunked prefill, and decode all read the
+                    # same (possibly dequantized) cross keys
+                    ckv0 = attn.init_kv_cache(
+                        x.shape[0], enc_out.shape[1], cfg.n_kv_heads,
+                        cfg.head_dim, k.dtype, kv_format=kv_fmt)
+                    ckv = attn.cache_write_prefill(ckv0, ck, cv,
+                                                   kv_format=kv_fmt)
+                    kc, vc = attn.cache_kv(ckv, kv_fmt, cfg.head_dim,
+                                           out_dtype=x.dtype)
+                    o = attn.attention(q, kc, vc, causal=False)
                     x = x + attn.project_out(p["cross"], o)
-                    entry["cross_kv"] = {"k": ck, "v": cv}
+                    entry["cross_kv"] = ckv
             elif blk.mixer == "ssm":
                 h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
                 out, (conv_state, ssm_state) = ssm_lib.ssm_forward(
@@ -422,12 +481,15 @@ def lm_decode_step(params: dict, cache: dict, token: jax.Array,
     continuous batching; pass a broadcast scalar for lockstep decode).
     Returns (logits (b, vocab), updated cache).
 
-    ``active`` (optional (b,) bool) masks *all* cache mutation — KV ring
-    writes, slot_pos bookkeeping, and SSM conv/state advancement — for
-    rows where it is False.  That is what makes this step scan-compatible
-    inside the fused multi-token decode loop: finished pool slots ride
-    along at zero state cost (their logits are computed but garbage, and
-    the caller masks their samples)."""
+    ``active`` (optional (b,) bool) masks *all* cache mutation through
+    the slot-state protocol (``repro.models.slotstate.decode_advance``):
+    ring KV is masked at the write site, cross-KV/enc_out are read-only,
+    and every recurrent part (SSM conv/state) row-selects new-vs-old —
+    one predicate, no per-mixer special cases.  That is what makes this
+    step scan-compatible inside the fused multi-token decode loop for
+    EVERY arch family: finished pool slots ride along at zero state cost
+    (their logits are computed but garbage, and the caller masks their
+    samples)."""
     from repro.models.layers import apply_rope
     pattern = cfg.block_pattern()
     x = embed(params["embed"], token[:, None])        # (b, 1, d)
@@ -443,14 +505,14 @@ def lm_decode_step(params: dict, cache: dict, token: jax.Array,
         for i, blk in enumerate(pattern):
             p = period_params[f"pos{i}"]
             c = period_cache[f"pos{i}"]
-            entry = {}
+            kv_fmt = cfg.kv_format_for(i)
+            new_parts = {}
             if blk.mixer == "attn":
                 h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
                 q = attn.project_q(p["attn"], h)
                 k, v = attn.project_kv(p["attn"], h)
                 q = apply_rope(q, positions, cfg.rope_theta)
                 k = apply_rope(k, positions, cfg.rope_theta)
-                kv_fmt = cfg.kv_format or None
                 kv = attn.cache_write_decode(c["kv"], k, v, pos,
                                              kv_format=kv_fmt,
                                              active=active)
@@ -460,24 +522,28 @@ def lm_decode_step(params: dict, cache: dict, token: jax.Array,
                     q, kc, vc, kv["slot_pos"], pos,
                     window=blk.window, softcap=cfg.attn_logit_softcap)
                 x = x + attn.project_out(p["attn"], o)
-                entry["kv"] = kv
-                if blk.cross_attn and enc_out is not None:
+                new_parts["kv"] = kv
+                if blk.cross_attn and "cross_kv" in c:
                     h = rms_norm(p["ln_cross"], x, cfg.norm_eps)
                     q = attn.project_q(p["cross"], h)
-                    ck, cv = c["cross_kv"]["k"], c["cross_kv"]["v"]
-                    o = attn.attention(q, ck, cv, causal=False)
+                    ck, cv = attn.cache_kv(c["cross_kv"], kv_fmt,
+                                           cfg.head_dim, out_dtype=x.dtype)
+                    # every valid source slot is visible (slot_pos >= 0
+                    # masks padding); a huge query position makes the
+                    # causal comparison vacuous
+                    o = attn.cache_attention(
+                        q, ck, cv, c["cross_kv"]["slot_pos"],
+                        jnp.full_like(positions, jnp.int32(2 ** 30)))
                     x = x + attn.project_out(p["cross"], o)
-                    entry["cross_kv"] = c["cross_kv"]
+                    new_parts["cross_kv"] = c["cross_kv"]
             elif blk.mixer == "ssm":
                 h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
-                out, new_ssm = ssm_lib.ssm_decode(p["ssm"], h,
-                                                  c["ssm"], cfg)
-                if active is not None:
-                    new_ssm = jax.tree.map(
-                        lambda n, o: attn.mask_rows(active, n, o),
-                        new_ssm, c["ssm"])
-                entry["ssm"] = new_ssm
+                out, new_parts["ssm"] = ssm_lib.ssm_decode(p["ssm"], h,
+                                                           c["ssm"], cfg)
                 x = x + out
+            entry = {part: slotstate.decode_advance(active, part, new,
+                                                    c[part])
+                     for part, new in new_parts.items()}
             if blk.ffn == "dense":
                 h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
                 x = x + apply_mlp(p["mlp"], h, cfg.mlp_variant)
@@ -505,13 +571,15 @@ def lm_decode_step(params: dict, cache: dict, token: jax.Array,
 # --------------------------------------------------------------------- #
 
 def supports_chunked_prefill(cfg: ArchConfig) -> bool:
-    """Chunked pooled prefill covers plain decoder LMs: every mixer is
-    attention (an SSM recurrence would need its state threaded through
-    chunk boundaries), no cross-attention, no modality frontend.  Other
-    families fall back to the width-1 prefill + slot scatter."""
-    return (not cfg.is_encoder_decoder and cfg.frontend is None
-            and all(b.mixer == "attn" and not b.cross_attn
-                    for b in cfg.block_pattern()))
+    """Always true: the slot-state protocol gives every arch family a
+    chunked-prefill leg — attention writes the chunk's ring region, SSM
+    carries conv/state across chunk boundaries
+    (:func:`repro.models.ssm.ssm_prefill_chunk`), enc-dec encodes once
+    into slot-resident enc_out/cross-KV (:func:`lm_encode_slot`) and
+    chunks the decoder prompt, and VLM chunks the patch-embedding prefix
+    through the same executable (``embeds=``).  Kept as a function for
+    API compatibility with the pre-protocol engine."""
+    return True
 
 
 def min_cache_capacity(cfg: ArchConfig, max_seq: int) -> int:
@@ -523,66 +591,58 @@ def min_cache_capacity(cfg: ArchConfig, max_seq: int) -> int:
 
 
 def clear_slot(cache: dict, slot: jax.Array) -> dict:
-    """Evict pool row ``slot``: mark every layer's ring entries empty
-    (slot_pos = -1) and zero recurrent/cross state.  K/V payloads stay —
-    slot_pos masking makes them unreachable — so this is O(capacity)
-    bookkeeping, not an O(cache) rewrite.  Runs jitted with ``slot``
-    traced (one executable serves every slot)."""
-    out: dict = {}
-    for name, entry in cache.items():
-        if name == "enc_out":
-            out[name] = entry.at[slot].set(
-                jnp.zeros_like(entry[0]))
-            continue
-        e: dict = {}
-        for part, tree in entry.items():
-            if part == "kv":
-                e[part] = dict(
-                    tree, slot_pos=tree["slot_pos"].at[:, slot].set(-1))
-            else:
-                # ssm conv/state and cross_kv are positional arrays with
-                # no ring bookkeeping (no slot_pos leaf) — zeroing the
-                # row IS their empty state
-                e[part] = jax.tree.map(
-                    lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, 0])),
-                    tree)
-        out[name] = e
-    return out
+    """Evict pool row ``slot`` under the slot-state protocol: ring parts
+    (self- AND cross-attn KV) mark their entries empty (slot_pos = -1;
+    payload bytes stay — position masking makes them unreachable), every
+    other part zeroes the slot row.  Runs jitted with ``slot`` traced
+    (one executable serves every slot).  See ``repro.models.slotstate``."""
+    return slotstate.clear_slot(cache, slot)
 
 
 def lm_prefill_chunk(params: dict, cache: dict, tokens: jax.Array,
                      slot: jax.Array, pos_offset: jax.Array,
-                     valid_len: jax.Array, cfg: ArchConfig
+                     valid_len: jax.Array, cfg: ArchConfig,
+                     embeds: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, dict]:
     """Prefill one prompt *chunk* for pool row ``slot`` directly into the
-    shared serving cache — the chunked pooled-prefill step.
+    shared serving cache — the chunked pooled-prefill step, for every
+    arch family via the slot-state protocol.
 
     tokens: (chunk,) int32, zero-padded past ``valid_len``;
-    pos_offset: scalar int32 absolute position of tokens[0];
-    valid_len: scalar int32 number of real tokens in this chunk.
-    All three are traced, so ceil(prompt/chunk) dispatches of ONE
-    compiled executable admit any prompt — no host-side cache pytree
-    rematerialization, no recompilation per prompt length.
+    pos_offset: scalar int32 absolute trunk position of tokens[0];
+    valid_len: scalar int32 number of real tokens in this chunk;
+    embeds: optional (1, chunk, d_model) — when given, the chunk's trunk
+    inputs are these precomputed embeddings instead of token lookups
+    (the VLM patch prefix streams through the SAME chunk machinery; the
+    engine keeps it a separate jitted executable so each stays
+    compiled-exactly-once).
+    slot/pos_offset/valid_len are traced, so ceil(prompt/chunk)
+    dispatches of ONE compiled executable admit any prompt — no
+    host-side cache pytree rematerialization, no recompilation per
+    prompt length.
 
-    Each attention layer writes the chunk's K/V (quantize-on-write for
-    ``cfg.kv_format`` caches) into the slot's ring region first, then
-    attends the chunk queries against the full ring row — position
-    masking (``slot_pos <= q_pos``) gives intra-chunk causality and
-    cross-chunk history in one mask.  Returns (logits (1, vocab) at the
-    last valid position, updated cache).
+    Per mixer (one ``valid`` predicate drives every write):
+      * attention writes the chunk's K/V (quantize-on-write under the
+        position's kv format) into the slot's ring region and attends
+        the chunk queries against history + itself via position masking;
+      * SSM carries conv/ssm state across chunk boundaries
+        (:func:`repro.models.ssm.ssm_prefill_chunk`);
+      * cross-attention reads the slot's cross-KV written once by
+        :func:`lm_encode_slot` (read-only here, like decode).
+
+    Returns (logits (1, vocab) at the last valid position, updated
+    cache).
     """
     from repro.models.layers import apply_rope
-    if not supports_chunked_prefill(cfg):
-        raise NotImplementedError(
-            f"{cfg.name}: chunked prefill needs an attention-only decoder "
-            f"(SSM/cross-attn/frontend archs use lm_prefill + scatter)")
     pattern = cfg.block_pattern()
     s = tokens.shape[0]
-    x = embed(params["embed"], tokens[None, :])       # (1, s, d)
-    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    if embeds is not None:
+        x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        x = embed(params["embed"], tokens[None, :])       # (1, s, d)
+        x = x.astype(jnp.dtype(cfg.compute_dtype))
     positions = pos_offset + jnp.arange(s, dtype=jnp.int32)   # (s,)
     valid = jnp.arange(s) < valid_len
-    kv_fmt = cfg.kv_format or None
 
     def period_fn(x, scanned):
         period_params, period_cache = scanned
@@ -590,40 +650,59 @@ def lm_prefill_chunk(params: dict, cache: dict, tokens: jax.Array,
         for i, blk in enumerate(pattern):
             p = period_params[f"pos{i}"]
             c = period_cache[f"pos{i}"]
-            h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
-            q = attn.project_q(p["attn"], h)
-            k, v = attn.project_kv(p["attn"], h)
-            q = apply_rope(q, positions[None, :], cfg.rope_theta)
-            k = apply_rope(k, positions[None, :], cfg.rope_theta)
-            kv_row = jax.tree.map(
-                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, 0),
-                c["kv"])
-            # Attend against the PRE-write history concatenated with the
-            # chunk's own raw K/V.  Writing first and attending over the
-            # ring would be wrong once a chunk wraps a sliding-window
-            # ring (capacity == window): the chunk's later writes evict
-            # positions still inside its earlier queries' windows.  The
-            # concat view keeps every position the full-prefill oracle
-            # sees — history from the cache, intra-chunk causality via
-            # the position mask — and matches lm_prefill in using the
-            # chunk's unquantized K/V for its own queries.
-            kc, vc = attn.cache_kv(kv_row, kv_fmt, cfg.head_dim,
-                                   out_dtype=x.dtype)
-            chunk_sp = jnp.where(valid, positions, -1)[None, :]
-            o = attn.cache_attention(
-                q,
-                jnp.concatenate([kc, k.astype(kc.dtype)], axis=1),
-                jnp.concatenate([vc, v.astype(vc.dtype)], axis=1),
-                jnp.concatenate([kv_row["slot_pos"], chunk_sp], axis=1),
-                positions[None, :], window=blk.window,
-                softcap=cfg.attn_logit_softcap)
-            x = x + attn.project_out(p["attn"], o)
-            kv_row = attn.cache_write_chunk(kv_row, k, v, positions,
-                                            valid, kv_format=kv_fmt)
-            entry = {"kv": jax.tree.map(
-                lambda pool, row: jax.lax.dynamic_update_slice_in_dim(
-                    pool, row, slot, 0),
-                c["kv"], kv_row)}
+            kv_fmt = cfg.kv_format_for(i)
+            entry = {}
+            if blk.mixer == "attn":
+                h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
+                q = attn.project_q(p["attn"], h)
+                k, v = attn.project_kv(p["attn"], h)
+                q = apply_rope(q, positions[None, :], cfg.rope_theta)
+                k = apply_rope(k, positions[None, :], cfg.rope_theta)
+                kv_row = slotstate.take_row(c["kv"], slot)
+                # Attend against the PRE-write history concatenated with
+                # the chunk's own raw K/V.  Writing first and attending
+                # over the ring would be wrong once a chunk wraps a
+                # sliding-window ring (capacity == window): the chunk's
+                # later writes evict positions still inside its earlier
+                # queries' windows.  The concat view keeps every position
+                # the full-prefill oracle sees — history from the cache,
+                # intra-chunk causality via the position mask — and
+                # matches lm_prefill in using the chunk's unquantized K/V
+                # for its own queries.
+                kc, vc = attn.cache_kv(kv_row, kv_fmt, cfg.head_dim,
+                                       out_dtype=x.dtype)
+                chunk_sp = jnp.where(valid, positions, -1)[None, :]
+                o = attn.cache_attention(
+                    q,
+                    jnp.concatenate([kc, k.astype(kc.dtype)], axis=1),
+                    jnp.concatenate([vc, v.astype(vc.dtype)], axis=1),
+                    jnp.concatenate([kv_row["slot_pos"], chunk_sp],
+                                    axis=1),
+                    positions[None, :], window=blk.window,
+                    softcap=cfg.attn_logit_softcap)
+                x = x + attn.project_out(p["attn"], o)
+                kv_row = attn.cache_write_chunk(kv_row, k, v, positions,
+                                                valid, kv_format=kv_fmt)
+                entry["kv"] = slotstate.put_row(c["kv"], kv_row, slot)
+                if blk.cross_attn and "cross_kv" in c:
+                    h = rms_norm(p["ln_cross"], x, cfg.norm_eps)
+                    q = attn.project_q(p["cross"], h)
+                    ckv_row = slotstate.take_row(c["cross_kv"], slot)
+                    ck, cv = attn.cache_kv(ckv_row, kv_fmt, cfg.head_dim,
+                                           out_dtype=x.dtype)
+                    o = attn.cache_attention(
+                        q, ck, cv, ckv_row["slot_pos"],
+                        jnp.full_like(positions, jnp.int32(2 ** 30))[
+                            None, :])
+                    x = x + attn.project_out(p["cross"], o)
+                    entry["cross_kv"] = c["cross_kv"]    # read-only
+            elif blk.mixer == "ssm":
+                h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
+                ssm_row = slotstate.take_row(c["ssm"], slot)
+                out, ssm_row = ssm_lib.ssm_prefill_chunk(
+                    p["ssm"], h, ssm_row, cfg, valid, valid_len)
+                x = x + out
+                entry["ssm"] = slotstate.put_row(c["ssm"], ssm_row, slot)
             if blk.ffn == "dense":
                 h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
                 x = x + apply_mlp(p["mlp"], h, cfg.mlp_variant)
@@ -641,4 +720,61 @@ def lm_prefill_chunk(params: dict, cache: dict, tokens: jax.Array,
     x_last = rms_norm(params["final_norm"], x_last, cfg.norm_eps)
     w_out = params["embed"].T if cfg.tie_embeddings else params["unembed"]
     logits = unembed(w_out, x_last, softcap=cfg.final_logit_softcap)[:, 0]
-    return logits, dict(new_layer_cache)
+    out_cache = dict(new_layer_cache)
+    if "enc_out" in cache:
+        out_cache["enc_out"] = cache["enc_out"]          # read-only
+    return logits, out_cache
+
+
+def lm_encode_slot(params: dict, cache: dict, frames: jax.Array,
+                   slot: jax.Array, src_len: jax.Array, cfg: ArchConfig
+                   ) -> dict:
+    """Run the encoder ONCE for pool row ``slot`` and write the results
+    slot-resident: ``enc_out`` row + every decoder layer's cross-KV ring
+    row (quantize-on-write under the position's kv format, slot_pos =
+    source positions, padding stays -1).  The decoder prompt then streams
+    through :func:`lm_prefill_chunk` and decode reads the same cached
+    cross view — encode-once, chunk-the-rest.
+
+    frames: (1, enc_len, d_model) frontend embeddings padded to the
+    pool's fixed enc_len; src_len: traced scalar int32 count of real
+    frames.  ``slot``/``src_len`` traced — one compiled executable
+    admits every request.
+    """
+    enc_len = frames.shape[1]
+    valid = (jnp.arange(enc_len) < src_len)[None, :]      # (1, enc_len)
+    enc = encode(params, frames, cfg, valid=valid)
+    # padded encoder positions are garbage — zero them so the stored
+    # enc_out row is clean (cross-attention masks them via slot_pos
+    # anyway; this keeps the top-level leaf inspectable)
+    enc = jnp.where(valid[..., None], enc, 0.0).astype(enc.dtype)
+    positions = jnp.arange(enc_len, dtype=jnp.int32)
+    pattern = cfg.block_pattern()
+
+    def period_fn(carry, scanned):
+        period_params, period_cache = scanned
+        new_cross = {}
+        for i, blk in enumerate(pattern):
+            entry = {}
+            if blk.cross_attn and "cross_kv" in period_cache[f"pos{i}"]:
+                p = period_params[f"pos{i}"]
+                c = period_cache[f"pos{i}"]
+                ck, cv = attn.project_kv(p["cross"], enc)
+                ckv_row = slotstate.take_row(c["cross_kv"], slot)
+                ckv_row = attn.cache_write_chunk(
+                    ckv_row, ck, cv, positions, valid[0],
+                    kv_format=cfg.kv_format_for(i))
+                entry["cross_kv"] = slotstate.put_row(
+                    c["cross_kv"], ckv_row, slot)
+            new_cross[f"pos{i}"] = entry
+        return carry, new_cross
+
+    layer_cache = {k: v for k, v in cache.items() if k.startswith("pos")}
+    _, new_cross = jax.lax.scan(
+        period_fn, 0.0, (params["layers"], layer_cache))
+    out = dict(cache)
+    for name, entry in new_cross.items():
+        out[name] = {**cache[name], **entry}
+    out["enc_out"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["enc_out"], enc.astype(cache["enc_out"].dtype), slot, 0)
+    return out

@@ -19,13 +19,19 @@ the hot path is device-resident:
   (KV ring, slot_pos, and SSM state all hold), so a slot finishing
   mid-loop rides along at zero state cost.  Host code touches tokens
   once per K steps instead of once per token.
-* **Chunked pooled prefill** — admission writes prompt chunks directly
-  into the slot's pool region inside a jitted step (quantize-on-write
-  for ``kv_format`` caches): ceil(prompt/chunk) dispatches of one
-  compiled executable, with no host-side rematerialization of the
-  whole cache pytree.  Architectures whose mixers carry recurrent
-  state across chunk boundaries (SSM/hybrid, enc-dec, VLM) fall back
-  to the width-1 prefill + slot scatter.
+* **Chunked pooled prefill for every arch** — admission writes prompt
+  chunks directly into the slot's pool region inside a jitted step
+  (quantize-on-write for ``kv_format`` caches): ceil(prompt/chunk)
+  dispatches of one compiled executable, with no host-side
+  rematerialization of the whole cache pytree.  The per-slot
+  slot-state protocol (``repro.models.slotstate``) extends this to
+  every mixer: SSM/hybrid archs carry conv/ssm state across chunk
+  boundaries, enc-dec archs encode once into slot-resident
+  enc_out/cross-KV (one ``encode_slot`` dispatch, then the decoder
+  prompt chunks), and VLM patch prefixes stream through the same
+  chunk executable as precomputed embeddings.  There is no width-1
+  prefill or host-side slot scatter anywhere — the fused-loop speedup
+  applies to every config in ``repro.configs``.
 
 Sampling inside the loop folds per-slot keys from (request id,
 position) — see ``serve.sampler.sample_tokens`` — so token streams are
@@ -79,6 +85,14 @@ class _Request:
     request_id: int
     prompt: List[int]
     max_new_tokens: int
+    frames: Optional[np.ndarray] = None    # enc-dec source embeddings
+    patches: Optional[np.ndarray] = None   # VLM patch-prefix embeddings
+
+    @property
+    def trunk_len(self) -> int:
+        """Decoder-trunk length: VLM patch prefix + text tokens."""
+        n_pat = 0 if self.patches is None else self.patches.shape[0]
+        return n_pat + len(self.prompt)
 
 
 class ServeEngine:
@@ -90,15 +104,21 @@ class ServeEngine:
     def __init__(self, model: Model, params, batch: int, max_seq: int,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  weight_format: Optional[str] = None, packed: bool = True,
-                 kv_format: Optional[str] = None,
-                 compute_dtype=jnp.bfloat16,
-                 decode_block: int = 16, prefill_chunk: int = 32):
+                 kv_format=None, compute_dtype=jnp.bfloat16,
+                 decode_block: int = 16, prefill_chunk: int = 32,
+                 enc_len: Optional[int] = None):
         if kv_format:
             # rebind the model onto a config whose cache layer quantizes:
             # every prefill/decode below then writes packed codes +
-            # 1-byte e8m0 scales instead of full-width K/V
-            model = build_model(
-                dataclasses.replace(model.cfg, kv_format=kv_format))
+            # 1-byte e8m0 scales instead of full-width K/V.  A
+            # tuple/list sets PER-POSITION-IN-PERIOD formats
+            # (cfg.kv_formats — e.g. fp8 global / fp4 local layers).
+            if isinstance(kv_format, (tuple, list)):
+                model = build_model(dataclasses.replace(
+                    model.cfg, kv_formats=tuple(kv_format)))
+            else:
+                model = build_model(
+                    dataclasses.replace(model.cfg, kv_format=kv_format))
         self.model = model
         self.kv_format = kv_format
         self.weight_store = None
@@ -113,14 +133,18 @@ class ServeEngine:
         self._temperature = temperature
         self._top_k = top_k
         self.decode_block = max(int(decode_block), 1)
-        self._chunked = model.supports_chunked_prefill
+        self._chunked = model.supports_chunked_prefill   # always True now
         self.prefill_chunk = max(
             1, min(int(prefill_chunk), model.min_cache_capacity(max_seq)))
+        # enc-dec pools pad every request's source frames to one fixed
+        # enc_len so the encode/decode executables compile exactly once
+        self.enc_len = ((enc_len or max_seq)
+                        if model.cfg.is_encoder_decoder else 0)
         # base sampling key; per-token keys are FOLDED from (request id,
         # position) inside the jitted loop — never split on the host
         self._sample_key = jax.random.PRNGKey(seed)
 
-        self.cache = model.init_cache(batch, max_seq)
+        self.cache = model.init_cache(batch, max_seq, enc_len=self.enc_len)
         # measured KV storage accounting (codes + scales, what a decode
         # step actually reads) — reported by Tab VIII next to weights
         self.kv_stats: Dict = model.kv_cache_stats(self.cache)
@@ -136,11 +160,18 @@ class ServeEngine:
         self.state = self._init_state()
 
         # jitted executables (shared across reset(); decode loops are
-        # cached per fused length K)
+        # cached per fused length K).  One executable per admission step
+        # kind — token chunks, embed chunks (VLM), encode (enc-dec) —
+        # each compiled exactly once (the sanitizer asserts this).
         self._loops: Dict[int, jax.stages.Wrapped] = {}
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, max_seq))
         self._prefill_chunk_fn = jax.jit(model.prefill_chunk)
+        if model.cfg.frontend == "vision":
+            self._prefill_embeds_fn = jax.jit(
+                lambda p, c, emb, slot, off, vl: model.prefill_chunk(
+                    p, c, jnp.zeros((emb.shape[1],), jnp.int32), slot,
+                    off, vl, embeds=emb))
+        if model.cfg.is_encoder_decoder:
+            self._encode_slot_fn = jax.jit(model.encode_slot)
         self._clear_slot_fn = jax.jit(model.clear_slot)
         self._admit_fn = jax.jit(self._admit_update)
 
@@ -169,7 +200,8 @@ class ServeEngine:
         """Clear all serving state (cache, slots, queue, results) while
         keeping compiled executables — benchmark legs reuse one engine so
         recompilation never pollutes a timed region."""
-        self.cache = self.model.init_cache(self.batch, self.max_seq)
+        self.cache = self.model.init_cache(self.batch, self.max_seq,
+                                           enc_len=self.enc_len)
         self.state = self._init_state()
         self.slot_req = [None] * self.batch
         self.out_tokens = [[] for _ in range(self.batch)]
@@ -178,20 +210,54 @@ class ServeEngine:
         self._next_id = 0
 
     # -- request management -------------------------------------------- #
-    def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
-        """Enqueue a request.  Prompts must leave room for at least one
-        generated token: a prompt of ``max_seq`` or longer used to be
-        admitted anyway, setting ``pos`` past the cache so the first
-        decode step attended over a silently clipped prefill."""
-        if len(prompt) >= self.max_seq:
+    def submit(self, prompt: List[int], max_new_tokens: int = 16,
+               frames=None, patches=None) -> int:
+        """Enqueue a request.
+
+        ``frames`` ((s_src, d_model) float) — REQUIRED for enc-dec archs:
+        the source-side frontend embeddings, padded on-device to the
+        pool's fixed ``enc_len``.  ``patches`` ((n_patches, d_model)
+        float) — optional VLM patch-prefix embeddings, prepended to the
+        decoder trunk (early fusion) and streamed through the chunked
+        prefill as precomputed embeddings.
+
+        Prompts must leave room for at least one generated token: a
+        trunk of ``max_seq`` or longer used to be admitted anyway,
+        setting ``pos`` past the cache so the first decode step attended
+        over a silently clipped prefill."""
+        cfg = self.model.cfg
+        if cfg.is_encoder_decoder:
+            if frames is None:
+                raise ValueError(
+                    f"{cfg.name} is encoder-decoder: submit() needs "
+                    f"frames=(s_src, d_model) source embeddings")
+            frames = np.asarray(frames)
+            if frames.ndim != 2 or frames.shape[0] < 1:
+                raise ValueError(f"frames must be (s_src, d_model); got "
+                                 f"{frames.shape}")
+            if frames.shape[0] > self.enc_len:
+                raise ValueError(
+                    f"source length {frames.shape[0]} > pool enc_len "
+                    f"{self.enc_len}: raise ServeEngine(enc_len=...)")
+        elif frames is not None:
+            raise ValueError(f"{cfg.name} is not encoder-decoder: "
+                             f"frames= is not accepted")
+        if patches is not None:
+            if cfg.frontend != "vision":
+                raise ValueError(f"{cfg.name} has no vision frontend: "
+                                 f"patches= is not accepted")
+            patches = np.asarray(patches)
+        req = _Request(self._next_id, list(prompt), max_new_tokens,
+                       frames=frames, patches=patches)
+        if req.trunk_len >= self.max_seq:
             raise ValueError(
-                f"prompt length {len(prompt)} >= max_seq {self.max_seq}: "
-                f"the cache holds max_seq-1 prompt tokens plus the "
-                f"decode stream; truncate the prompt or raise max_seq")
-        rid = self._next_id
+                f"trunk length {req.trunk_len} (prompt + patch prefix) "
+                f">= max_seq {self.max_seq}: the cache holds max_seq-1 "
+                f"prompt tokens plus the decode stream; truncate the "
+                f"prompt or raise max_seq")
         self._next_id += 1
-        self.queue.append(_Request(rid, list(prompt), max_new_tokens))
-        return rid
+        self.queue.append(req)
+        return req.request_id
 
     def _admit_update(self, state, logits, slot, plen, max_new, rid, key):
         """Jitted per-admission state write: sample the first token from
@@ -209,31 +275,47 @@ class ServeEngine:
         }
 
     def _prefill_into_slot(self, slot: int, req: _Request) -> jax.Array:
-        """Build the slot's cache region; returns last-prompt-position
-        logits (1, vocab)."""
-        if self._chunked:
-            # evict the previous tenant's ring bookkeeping, then stream
-            # prompt chunks straight into the pool region (jitted;
-            # quantize-on-write for kv_format caches)
-            self.cache = self._clear_slot_fn(self.cache, jnp.int32(slot))
-            chunk, plen = self.prefill_chunk, len(req.prompt)
-            logits = None
-            for off in range(0, plen, chunk):
-                part = req.prompt[off:off + chunk]
-                valid = len(part)
-                part = part + [0] * (chunk - valid)
-                logits, self.cache = self._prefill_chunk_fn(
-                    self.params, self.cache,
-                    jnp.asarray(part, jnp.int32), jnp.int32(slot),
-                    jnp.int32(off), jnp.int32(valid))
-            return logits
-        # fallback (SSM/hybrid, enc-dec, VLM): width-1 prefill whose
-        # cache is scattered into the slot
-        tokens = jnp.asarray([req.prompt], jnp.int32)
-        logits, cache1 = self._prefill(self.params, {"tokens": tokens})
-        self.cache = jax.tree.map(
-            lambda pool, one: self._scatter_slot(pool, one, slot),
-            self.cache, cache1)
+        """Build the slot's cache region through the slot-state protocol;
+        returns last-prompt-position logits (1, vocab).
+
+        Every arch admits the same way: evict the previous tenant's ring
+        bookkeeping (``clear_slot``), run the per-request one-shot legs
+        (enc-dec: one ``encode_slot`` dispatch writing slot-resident
+        enc_out + quantized cross-KV), then stream the decoder trunk —
+        VLM patch-embedding chunks first, token chunks after — straight
+        into the pool region (jitted; quantize-on-write for kv_format
+        caches; SSM conv/state carried across chunk boundaries)."""
+        self.cache = self._clear_slot_fn(self.cache, jnp.int32(slot))
+        cdtype = jnp.dtype(self.model.cfg.compute_dtype)
+        chunk = self.prefill_chunk
+        if req.frames is not None:
+            src = req.frames.shape[0]
+            padded = np.zeros((1, self.enc_len, req.frames.shape[1]),
+                              np.float32)
+            padded[0, :src] = req.frames
+            self.cache = self._encode_slot_fn(
+                self.params, self.cache, jnp.asarray(padded, cdtype),
+                jnp.int32(slot), jnp.int32(src))
+        offset, logits = 0, None
+        if req.patches is not None:
+            n_pat = req.patches.shape[0]
+            for off in range(0, n_pat, chunk):
+                part = req.patches[off:off + chunk]
+                valid = part.shape[0]
+                padded = np.zeros((1, chunk, part.shape[1]), np.float32)
+                padded[0, :valid] = part
+                logits, self.cache = self._prefill_embeds_fn(
+                    self.params, self.cache, jnp.asarray(padded, cdtype),
+                    jnp.int32(slot), jnp.int32(off), jnp.int32(valid))
+            offset = n_pat
+        for off in range(0, len(req.prompt), chunk):
+            part = req.prompt[off:off + chunk]
+            valid = len(part)
+            part = part + [0] * (chunk - valid)
+            logits, self.cache = self._prefill_chunk_fn(
+                self.params, self.cache,
+                jnp.asarray(part, jnp.int32), jnp.int32(slot),
+                jnp.int32(offset + off), jnp.int32(valid))
         return logits
 
     def _admit(self) -> None:
@@ -244,25 +326,12 @@ class ServeEngine:
             logits = self._prefill_into_slot(slot, req)
             tok, self.state = self._admit_fn(
                 self.state, logits, jnp.int32(slot),
-                jnp.int32(len(req.prompt)), jnp.int32(req.max_new_tokens),
+                jnp.int32(req.trunk_len), jnp.int32(req.max_new_tokens),
                 jnp.int32(req.request_id), self._sample_key)
             self.slot_req[slot] = req
             self.out_tokens[slot] = [int(tok)]
             if req.max_new_tokens <= 1:
                 self._finish(slot)
-
-    @staticmethod
-    def _scatter_slot(pool: jax.Array, one: jax.Array, slot: int):
-        """Write a batch-1 cache leaf into pool slot ``slot``.
-
-        Cache leaves carry batch on axis 0 (enc_out) or axis 1 (stacked
-        period leaves); identified by matching the pool/one shapes.  A
-        pool of width 1 has no differing axis — the leaf is replaced."""
-        axis = next((i for i, (a, b) in enumerate(zip(pool.shape, one.shape))
-                     if a != b), None)
-        if axis is None:
-            return one
-        return jax.lax.dynamic_update_slice_in_dim(pool, one, slot, axis)
 
     # -- fused decode --------------------------------------------------- #
     def _make_decode_loop(self, k: int):

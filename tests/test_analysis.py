@@ -520,6 +520,21 @@ class TestSanitizers:
             f"{rep['quantize_tree_syncs']} syncs for "
             f"{rep['quantize_tree_leaves']} leaves")
 
+    @pytest.mark.parametrize("arch", ["mamba2-2.7b",
+                                      "seamless-m4t-medium"])
+    def test_serving_sanitized_per_family(self, arch):
+        """Same compile-once / zero-sync discipline on the SSM and
+        enc-dec scenarios (the slot-state protocol makes their hot
+        loops structurally identical to the attention arch's — the
+        enc-dec engine adds the encode_slot admission executable, which
+        must also compile exactly once)."""
+        rep = SAN.sanitize_serving(arch=arch)
+        assert rep["compiled_exactly_once"], rep
+        assert rep["zero_implicit_loop_transfers"], rep
+        assert rep["tokens_match_warmup"], rep
+        if arch == "seamless-m4t-medium":
+            assert rep["compile_cache_sizes"]["encode_slot"] == 1, rep
+
 
 # ---------------------------------------------------------------------------
 # CLI

@@ -71,6 +71,34 @@ def test_ssd_scan_sweep(key, chunk, s, h, p, n):
                                atol=2e-4)
 
 
+def test_ssd_scan_initial_state(key):
+    """Kernel carry-in: scanning [s0 | s1] in one call == scanning s0,
+    then s1 seeded with s0's final state (the chunked-prefill contract)."""
+    s0, s1, h, p, n = 64, 64, 2, 32, 16
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (2, s0 + s1, h, p)) * 0.5
+    dt_a = -jnp.abs(jax.random.normal(ks[1], (2, s0 + s1, h))) * 0.2
+    b = jax.random.normal(ks[2], (2, s0 + s1, n)) * 0.5
+    c = jax.random.normal(ks[3], (2, s0 + s1, n)) * 0.5
+    y_all, st_all = K.ssd_scan(x, dt_a, b, c, chunk=32)
+    _, st0 = K.ssd_scan(x[:, :s0], dt_a[:, :s0], b[:, :s0], c[:, :s0],
+                        chunk=32)
+    y1, st1 = K.ssd_scan(x[:, s0:], dt_a[:, s0:], b[:, s0:], c[:, s0:],
+                         chunk=32, initial_state=st0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y_all[:, s0:]),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st_all),
+                               atol=2e-4)
+    # and against the jnp oracle with the same carry
+    y1_ref, st1_ref = ref.ssd_ref(x[:, s0:], dt_a[:, s0:], b[:, s0:],
+                                  c[:, s0:], sequential=True,
+                                  initial_state=st0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y1_ref),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st1_ref),
+                               atol=2e-4)
+
+
 def test_ssd_scan_padding(key):
     """s=100 not a chunk multiple -> ops pads with an identity tail."""
     ks = jax.random.split(key, 4)
