@@ -1,9 +1,13 @@
-"""Shared benchmark plumbing: result container + CSV/markdown emit."""
+"""Shared benchmark plumbing: result container + CSV/markdown emit,
+plus the rolling per-PR trajectory file (``append_history``)."""
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
+import subprocess
+import time
 from typing import Any, Dict, List, Mapping, Sequence
 
 
@@ -37,6 +41,53 @@ def table(headers: Sequence[str], rows: Sequence[Sequence[Any]]) -> str:
     for r in rows:
         out.append("| " + " | ".join(_fmt(c) for c in r) + " |")
     return "\n".join(out) + "\n"
+
+
+def parse_csv_row(row: str) -> tuple:
+    """Invert ``csv()``: ``"name,k=v,..."`` -> ``(name, {k: v})``.
+
+    Values stay strings; callers that want numbers convert themselves
+    (the history record keeps them as emitted so the JSONL line matches
+    the printed CSV byte-for-byte)."""
+    name, _, rest = row.partition(",")
+    fields: Dict[str, str] = {}
+    for cell in rest.split(","):
+        k, _, v = cell.partition("=")
+        fields[k] = v
+    return name, fields
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def append_history(record: Mapping[str, Any],
+                   path: str = "results/BENCH_history.jsonl") -> Dict:
+    """Append one benchmark-trajectory record to the rolling JSONL file.
+
+    One line per benchmark run (in practice: one per PR's CI run), so
+    ``results/BENCH_history.jsonl`` is the repo's perf trajectory —
+    regressions show up as a diff in review, not as a lost artifact.
+    Stamps schema version, UTC time, and git revision; the caller
+    supplies the headline numbers (and the compat header, so a line is
+    interpretable even after the emulated/native split changes)."""
+    stamped = {
+        "schema": 1,
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "git": _git_rev(),
+    }
+    stamped.update(record)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(stamped, sort_keys=False) + "\n")
+    return stamped
 
 
 def write_report(results: Sequence[BenchResult],

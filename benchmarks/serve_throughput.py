@@ -26,6 +26,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import math
 import os
 import sys
 from typing import Dict, Optional
@@ -36,10 +37,11 @@ if __package__ in (None, ""):      # `python benchmarks/serve_throughput.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
 
-from benchmarks.common import BenchResult, csv, table
+from benchmarks.common import BenchResult, append_history, csv, table
 from repro import compat
 from repro.analysis.sanitize import CompileCounter
 from repro.configs import get_config
+from repro.core.device_model import detect_backend_model
 from repro.core.timing import time_fn
 from repro.models import build_model
 from repro.serve import ServeEngine
@@ -66,9 +68,47 @@ def _drive(eng: ServeEngine, n_req: int, prompt_len: int,
     return sum(len(r.tokens) for r in results)
 
 
+def _bandwidth(eng: ServeEngine, batch: int, n_dev: int) -> Dict:
+    """maxtext-style per-step byte accounting, per device.
+
+    A memory-bound decode step streams the weight store once (the
+    *stored* bytes: bit-packed fp4/fp6 count at 0.5/0.75 B/elem, not a
+    nominal width) plus the resident KV pool (measured codes + scales
+    over the live cache pytree).  Sharding divides the stream: each
+    device reads only its parameter/KV shard, so bytes/step/device is
+    the total over ``n_dev`` — that is the whole per-device bandwidth
+    win TP buys for decode.  ``hbm_bound_tok_per_s`` is the roofline
+    ceiling batch*BW/bytes on the *detected* backend's HBM (§VI.D:
+    decode throughput = how fast you can stream the resident state)."""
+    if eng.weight_stats is not None:
+        weight_bytes = int(eng.weight_stats["quantized_bytes"])
+    else:
+        weight_bytes = int(sum(x.nbytes for x in
+                               jax.tree.leaves(eng.params)))
+    kv_bytes = int(eng.kv_stats["kv_bytes"])
+    per_dev = (weight_bytes + kv_bytes) / n_dev
+    dm = detect_backend_model()
+    bw = dm.hbm.bandwidth_Bps
+    return {
+        "n_devices": n_dev,
+        "weight_bytes": weight_bytes,
+        "kv_bytes": kv_bytes,
+        "bytes_per_step_device": per_dev,
+        "gbytes_per_step_device": per_dev / 1e9,
+        "backend_model": dm.name,
+        "hbm_GBps": bw / 1e9,
+        "hbm_bound_tok_per_s": batch * bw / per_dev,
+    }
+
+
 def measure(quick: bool = False, kv_format: Optional[str] = None,
-            decode_block: int = 16, arch: str = "gptneox-1b") -> Dict:
-    """Both legs on one model; returns the artifact dict."""
+            decode_block: int = 16, arch: str = "gptneox-1b",
+            mesh=None) -> Dict:
+    """Both legs on one model; returns the artifact dict.
+
+    ``mesh`` is a ``jax.sharding.Mesh`` (or None): both legs run
+    through the same sharded engine, so the greedy-identity gate also
+    certifies the mesh run against itself per-step vs fused."""
     cfg = get_config(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -79,12 +119,16 @@ def measure(quick: bool = False, kv_format: Optional[str] = None,
     n_req, prompt_len, new_tokens = (4, 8, 24) if quick else (8, 8, 32)
     iters, warmup = (5, 1) if quick else (5, 2)
 
+    n_dev = int(math.prod(mesh.devices.shape)) if mesh is not None else 1
     legs: Dict[str, Dict] = {}
     streams = {}
+    bandwidth: Dict = {}
     for name, block in (("per_step", 1), ("fused", decode_block)):
         eng = ServeEngine(model, params, batch=4, max_seq=128,
                           kv_format=kv_format, decode_block=block,
-                          prefill_chunk=16)
+                          prefill_chunk=16, mesh=mesh)
+        if not bandwidth:
+            bandwidth = _bandwidth(eng, batch=4, n_dev=n_dev)
         n_tok = _drive(eng, n_req, prompt_len, new_tokens)
         streams[name] = [r.tokens for r in
                          sorted(eng.results, key=lambda r: r.request_id)]
@@ -112,19 +156,24 @@ def measure(quick: bool = False, kv_format: Optional[str] = None,
             "fused decode_loop diverged from per-step decode (greedy "
             "streams must be bit-identical): "
             f"{streams['per_step']} vs {streams['fused']}")
+    bandwidth["achieved_frac_fused"] = (
+        legs["fused"]["tok_per_s"] / bandwidth["hbm_bound_tok_per_s"])
     return {
         "arch": cfg.name,
         "kv_format": kv_format or "none",
+        "mesh": ("x".join(str(s) for s in mesh.devices.shape)
+                 if mesh is not None else "none"),
         "requests": n_req, "prompt_len": prompt_len,
         "new_tokens": new_tokens,
         "per_step": legs["per_step"], "fused": legs["fused"],
         "speedup": legs["fused"]["tok_per_s"]
         / legs["per_step"]["tok_per_s"],
         "greedy_identical": identical,
+        "bandwidth": bandwidth,
     }
 
 
-def run(quick: bool = False) -> BenchResult:
+def run(quick: bool = False, mesh=None) -> BenchResult:
     # one row per arch FAMILY through the same fused loop + chunked
     # pooled prefill (attn / ssm / hybrid / enc-dec), plus the quantized
     # KV leg on the attention arch
@@ -137,31 +186,42 @@ def run(quick: bool = False) -> BenchResult:
     ]
     rows, csv_rows, artifacts = [], [], []
     for family, arch, kv_format in scenarios:
-        art = measure(quick=quick, kv_format=kv_format, arch=arch)
+        art = measure(quick=quick, kv_format=kv_format, arch=arch,
+                      mesh=mesh)
         art["family"] = family
         artifacts.append(art)
-        rows.append([family, art["arch"], art["kv_format"],
+        bw = art["bandwidth"]
+        rows.append([family, art["arch"], art["kv_format"], art["mesh"],
                      f"{art['per_step']['tok_per_s']:.1f}",
                      f"{art['fused']['tok_per_s']:.1f}",
                      f"{art['speedup']:.2f}x",
+                     f"{bw['gbytes_per_step_device']:.3f}",
+                     f"{bw['hbm_bound_tok_per_s']:.0f}",
                      "yes" if art["greedy_identical"] else "NO"])
         csv_rows.append(csv(
             "serve_throughput", family=family, arch=art["arch"],
-            kv_format=art["kv_format"],
+            kv_format=art["kv_format"], mesh=art["mesh"],
             tok_per_s_per_step=art["per_step"]["tok_per_s"],
             tok_per_s_fused=art["fused"]["tok_per_s"],
             decode_block=art["fused"]["decode_block"],
             speedup=art["speedup"],
+            n_devices=bw["n_devices"],
+            gbytes_per_step_device=bw["gbytes_per_step_device"],
+            hbm_bound_tok_per_s=bw["hbm_bound_tok_per_s"],
             greedy_identical=int(art["greedy_identical"])))
-    md = table(["family", "arch", "kv_format", "tok/s per-step",
-                "tok/s fused (K=16)", "speedup", "greedy identical"],
+    md = table(["family", "arch", "kv_format", "mesh",
+                "tok/s per-step", "tok/s fused (K=16)", "speedup",
+                "GB/step/dev", "HBM-bound tok/s", "greedy identical"],
                rows)
     md += ("\nOne dispatch per K tokens instead of per token: the gap is "
            "pure dispatch/sync overhead, since both legs run the same "
            "jitted step body (the §IV.A overhead story applied to our "
            "own hot loop).  On this backend the per-step leg measures "
            "the Python interpreter + launch path, the fused leg the "
-           "machine.\n")
+           "machine.  GB/step/dev is the memory-bound decode read per "
+           "device (stored weights + measured KV pool, over the mesh "
+           "size); the HBM-bound column is the §VI.D roofline ceiling "
+           "batch*BW/bytes for the detected backend.\n")
     res = BenchResult("serve_throughput", "§IV.A/§VI.D (serving)", md,
                       csv_rows)
     res.artifacts = artifacts          # for the __main__ JSON writer
@@ -172,23 +232,47 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--mesh", default=None,
+                    help="serving mesh, e.g. 2x2 or 4; needs that many "
+                         "devices (CPU: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count first)")
+    ap.add_argument("--history", default=None,
+                    help="also append headline numbers to this JSONL "
+                         "trajectory file (see benchmarks/run.py, which "
+                         "appends to results/BENCH_history.jsonl)")
     args = ap.parse_args()
 
+    from repro.launch.mesh import make_serving_mesh
+
+    mesh = make_serving_mesh(args.mesh)
     rep = compat.report()
     print(rep)
-    res = run(quick=args.quick)
+    res = run(quick=args.quick, mesh=mesh)
     print(res.markdown)
     for row in res.csv_rows:
         print(row)
     payload = {
         "bench": "serve_throughput",
         "quick": args.quick,
+        "mesh": args.mesh or "none",
         "compat": dataclasses.asdict(rep),
         "runs": res.artifacts,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"bench,serve_throughput,artifact={args.out}")
+    if args.history:
+        append_history({
+            "bench": "serve_throughput", "quick": args.quick,
+            "mesh": args.mesh or "none",
+            "compat": dataclasses.asdict(rep),
+            "serve": [{k: a[k] for k in
+                       ("family", "arch", "kv_format", "mesh",
+                        "speedup", "bandwidth")}
+                      | {"tok_per_s_fused": a["fused"]["tok_per_s"]}
+                      for a in res.artifacts],
+        }, path=args.history)
+        print(f"bench,serve_throughput,history={args.history}")
     # regression gate: fused must beat per-step.  The quick leg runs few
     # short iterations on shared CI hosts, so it gets a noise margin;
     # the full leg is held to a strict >1x.

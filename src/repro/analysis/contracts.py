@@ -46,6 +46,7 @@ _LAYOUT_PRIMS = {
     "slice", "dynamic_slice", "dynamic_update_slice", "concatenate",
     "rev", "gather", "scatter", "pad", "copy", "select_n", "tile",
     "device_put", "split", "stop_gradient", "squeeze_p",
+    "sharding_constraint",       # GSPMD placement hint: bytes unchanged
 }
 # reaching one of these means the in-register expand has begun: the
 # payload is no longer "packed bytes pretending to be dense"
@@ -246,7 +247,8 @@ def cache_width_findings(fn: Callable, args: Tuple[Any, ...], label: str,
 # the repo's named hot entry points
 
 
-def check_entry_points(kv_format: str = "float4_e2m1fn") -> List[Finding]:
+def check_entry_points(kv_format: str = "float4_e2m1fn",
+                       mesh: Any = "auto") -> List[Finding]:
     """Contract-check the serving hot paths on tiny quantized configs.
 
     Covers: ``lm_decode_step`` (via ``model.decode_step``), the fused
@@ -255,6 +257,14 @@ def check_entry_points(kv_format: str = "float4_e2m1fn") -> List[Finding]:
     (SSM-state) and enc-dec (slot-resident ``enc_out`` + quantized
     cross-KV, via ``lm_encode_slot``) families, which run the same
     slot-state protocol.  Pure tracing — nothing executes.
+
+    ``mesh``: the *sharded* engine's entry points join the check — the
+    mesh-native jit wrappers (``out_shardings`` pinned to the serving
+    rules, sample-point ``with_sharding_constraint`` in the loop body)
+    must not introduce a packed upcast or a host callback either.
+    ``"auto"`` (default) builds a (1, 1) ('data', 'model') mesh so the
+    sharded trace runs on single-device CI; pass a real ``Mesh`` to
+    trace the actual TP partitioning, or ``None`` to skip.
     """
     import jax
     import jax.numpy as jnp
@@ -374,5 +384,29 @@ def check_entry_points(kv_format: str = "float4_e2m1fn") -> List[Finding]:
         lambda qq, kv, pp: ops.flash_decode_quant(qq, kv, pp, fmt="float4_e2m1fn",
                                                   bk=8),
         (q, kv_cache, pos), "flash_decode_quant")
+
+    # Mesh-native serving entry points: the same fused loop + chunked
+    # prefill, but compiled through the sharded wrappers.  The packed
+    # k_q/v_q payload now carries NamedShardings and the jaxpr grows
+    # sharding_constraint/pjit structure — the contract is unchanged:
+    # codes stay uint8 until their expand, no host callbacks appear.
+    if mesh == "auto":
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh((1, 1))
+    if mesh is not None:
+        sh_eng = ServeEngine(model, params, batch=batch, max_seq=max_seq,
+                             decode_block=4, mesh=mesh)
+        findings += contract_findings(
+            sh_eng._make_decode_loop(4),
+            (sh_eng.params, sh_eng.cache, sh_eng.state,
+             sh_eng._sample_key), "decode_loop[sharded,k=4]")
+        findings += contract_findings(
+            sh_eng._prefill_chunk_fn,
+            (sh_eng.params, sh_eng.cache, chunk, jnp.int32(0),
+             jnp.int32(0), jnp.int32(4)), "lm_prefill_chunk[sharded]")
+        findings += cache_width_findings(
+            sh_eng._prefill_chunk_fn,
+            (sh_eng.params, sh_eng.cache, chunk, jnp.int32(0),
+             jnp.int32(0), jnp.int32(4)), "lm_prefill_chunk[sharded]")
 
     return findings

@@ -23,6 +23,15 @@ overhead before trusting numbers) translates here to two counters:
 decode loop performed zero implicit host transfers, and (c) what
 ``quantize_tree`` costs in syncs per tree (2 after the PR-6 fix; 2 per
 *leaf* before it).
+
+With ``mesh=...`` the same scenario runs through the mesh-native
+engine and the report gains the *collective* half of the story: the
+fused loop's partitioned HLO is parsed for all-gather/all-reduce ops
+and the report asserts no all-gather materializes anything larger than
+the logits — the designed sample-point gather.  A weight or KV-pool
+gather inside the scan body would mean GSPMD decided to unshard the
+state every step, silently erasing the per-device bandwidth win the
+sharded engine exists for.
 """
 
 from __future__ import annotations
@@ -155,9 +164,44 @@ def _drive(eng, prompts, max_new: int, k: int, loops: int,
     return results, sc.count, cc.count
 
 
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "collective-permute", "all-to-all")
+
+
+def collective_report(hlo: str, logits_elems: int) -> Dict:
+    """Parse partitioned HLO text for collectives.
+
+    Returns op counts plus every all-gather whose *output* (per-device,
+    post-gather) exceeds ``logits_elems`` elements — the sample-point
+    logits gather is the largest collective the sharded decode loop is
+    allowed; anything bigger is a weight/KV unshard.
+    """
+    import re
+
+    counts: Dict[str, int] = {}
+    oversized: List[str] = []
+    lhs = re.compile(r"=\s*(.+?)\s(" + "|".join(_COLLECTIVE_OPS) + r")\(")
+    dims_pat = re.compile(r"\[([0-9,]*)\]")
+    for line in hlo.splitlines():
+        m = lhs.search(line)
+        if not m:
+            continue
+        shape_s, op = m.groups()
+        counts[op] = counts.get(op, 0) + 1
+        for dm in dims_pat.finditer(shape_s):
+            n = 1
+            for d in dm.group(1).split(","):
+                if d:
+                    n *= int(d)
+            if op == "all-gather" and n > logits_elems:
+                oversized.append(f"{op} -> {shape_s.strip()}")
+                break
+    return {"counts": counts, "oversized_gathers": oversized}
+
+
 def sanitize_serving(kv_format: Optional[str] = None,
                      weight_format: Optional[str] = None,
-                     arch: str = "gptneox-1b") -> Dict:
+                     arch: str = "gptneox-1b", mesh=None) -> Dict:
     """Scripted serving scenario under the full sanitizer stack.
 
     Two passes of the same script: a warm-up pass that is *allowed* to
@@ -169,6 +213,15 @@ def sanitize_serving(kv_format: Optional[str] = None,
     compile-once / zero-sync discipline, including the enc-dec
     ``encode_slot`` admission executable.  Returns a report dict; the
     tier-1 test asserts on it.
+
+    ``mesh``: run the scenario through the mesh-native engine.  The
+    compile-once / zero-implicit-transfer assertions are identical (the
+    engine's ``out_shardings``-pinned executables must not trigger
+    resharding recompiles, and slot admission must not introduce
+    cross-device host syncs); additionally the fused loop's partitioned
+    HLO is parsed for collectives — see ``collective_report`` — and the
+    report's ``no_oversized_gathers`` proves nothing larger than the
+    sample-point logits gather appears in the scan.
     """
     import jax
     import numpy as np
@@ -196,7 +249,7 @@ def sanitize_serving(kv_format: Optional[str] = None,
 
     eng = ServeEngine(model, params, batch=2, max_seq=64,
                       kv_format=kv_format, weight_format=weight_format,
-                      decode_block=k, prefill_chunk=4)
+                      decode_block=k, prefill_chunk=4, mesh=mesh)
 
     warm_results, _, warm_compiles = _drive(eng, prompts, max_new, k,
                                             loops, frames=frames)
@@ -230,4 +283,22 @@ def sanitize_serving(kv_format: Optional[str] = None,
         "quantize_tree_syncs": qc.count,
         "quantize_tree_leaves": n_leaves,
     }
+
+    if mesh is not None:
+        # collective half: lower the fused loop (cache hit — it already
+        # compiled once above; AOT lowering does not touch the jit
+        # dispatch cache the compile-once assertion reads) and parse the
+        # partitioned HLO.  The logits gather (batch × vocab, the
+        # sample point) is the ceiling.
+        hlo = eng._loops[k].lower(
+            eng.params, eng.cache, eng.state,
+            eng._sample_key).compile().as_text()
+        coll = collective_report(hlo, logits_elems=eng.batch
+                                 * cfg.vocab_size)
+        report["mesh"] = "x".join(str(s) for s in mesh.devices.shape)
+        report["loop_collectives"] = coll["counts"]
+        report["oversized_gathers"] = coll["oversized_gathers"]
+        report["no_oversized_gathers"] = not coll["oversized_gathers"]
+    else:
+        report["mesh"] = "none"
     return report

@@ -3,12 +3,20 @@
 from repro.distributed.sharding import (  # noqa: F401
     axis_size,
     batch_specs,
+    cache_shardings,
     cache_specs,
+    device_put_store,
     dp_axes,
+    logits_spec,
     named,
     param_shardings,
     param_specs,
+    serving_shardings,
     spec_local_bytes,
+    state_shardings,
+    state_specs,
+    weight_store_shardings,
+    weight_store_specs,
 )
 from repro.distributed.compression import (  # noqa: F401
     compressed_psum,

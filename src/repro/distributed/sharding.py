@@ -26,6 +26,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.attention import QUANT_KV_LEAVES
+from repro.models.slotstate import SLOT_STATE_FIELDS
 
 
 # --------------------------------------------------------------------- #
@@ -225,16 +227,32 @@ def cache_rule(names: Sequence[str], shape: Tuple[int, ...],
         return P(b, None, None)
     # all other leaves are period-stacked: shape[0] = n_periods
     batch = shape[1]
-    if name in ("k", "v"):
+    if name in ("k", "v") or name in QUANT_KV_LEAVES:
+        # dense K/V *and* the quantized-store leaves (packed codes k_q/v_q
+        # + e8m0 scale bytes k_s/v_s): pool slots on the data axes, heads
+        # on 'model', GQA spill onto the sequence dim.  The packed last
+        # dim (stored bytes / scale blocks, not head_dim) is never
+        # sharded — sub-byte groups must stay device-local.  Self- and
+        # cross-attention KV (``cross_kv``) share this rule: their leaf
+        # names and layouts are identical (cross capacity = enc_len).
         b, s, h = _kv_seq_axes(mesh, batch, shape[2], shape[3])
         return P(None, b, s, h, None)
     if name == "slot_pos":
         b, s, _ = _kv_seq_axes(mesh, batch, shape[2], cfg.n_kv_heads)
         return P(None, b, s)
     b = _maybe(mesh, batch, dp)
-    if name == "conv":
+    if name == "conv_x":
+        # SSM carried conv window, x section (n_p, b, k-1, d_inner):
+        # channels are the TP dim — shards with wx / conv_x_w on 'model'
+        # so the decode window concat and depthwise conv stay local.
+        return P(None, b, None, _maybe(mesh, shape[3], "model"))
+    if name in ("conv_b", "conv_c"):
+        # B/C conv sections (n_p, b, k-1, ssm_state): the state dim n is
+        # head-shared (ngroups=1) and stays replicated, like wb/wc.
         return P(None, b, None, None)
     if name == "state":
+        # SSM state (n_p, b, heads, head_dim, ssm_state): heads are the
+        # TP dim (matches the wdt/A_log/D parameter placement on 'model').
         heads = _maybe(mesh, shape[2], "model")
         return P(None, b, heads, None, None)
     return P(*(None for _ in shape))
@@ -247,19 +265,172 @@ def cache_specs(cfg: ArchConfig, mesh: Mesh, cache_shapes) -> Any:
         cache_shapes)
 
 
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, cache_shapes) -> Any:
+    return jax.tree.map(lambda s: named(mesh, s),
+                        cache_specs(cfg, mesh, cache_shapes))
+
+
+# --------------------------------------------------------------------- #
+# Serving: slot state / quantized weight store / sample-point specs
+# --------------------------------------------------------------------- #
+
+def state_rule(name: str, mesh: Mesh) -> P:
+    """Spec for one engine slot-state leaf (a (batch,) bookkeeping
+    array — ``repro.models.slotstate.SLOT_STATE_FIELDS``).
+
+    Replicated by design: the fused loop's bookkeeping arithmetic runs on
+    logits that were just all-gathered at the sample point anyway, the
+    leaves are a few bytes per slot, and the host reads ``active`` back
+    once per K-step block — a dp-sharded slot state would turn that one
+    designed readback into a cross-device gather per dispatch."""
+    assert name in SLOT_STATE_FIELDS, name
+    return P()
+
+
+def state_specs(mesh: Mesh, state: Any) -> Any:
+    return {name: state_rule(name, mesh) for name in state}
+
+
+def state_shardings(mesh: Mesh, state: Any) -> Any:
+    return jax.tree.map(lambda s: named(mesh, s),
+                        state_specs(mesh, state),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def logits_spec(mesh: Mesh) -> P:
+    """Sample-point spec: fully replicated (b, vocab) logits.
+
+    The unembedding leaves decode logits vocab-sharded over 'model' (the
+    embed/unembed placement); sampling — argmax or the per-slot folded
+    categorical — must see every vocab column AND feed the replicated
+    slot state, so the one all-gather of the serving hot loop happens
+    here, on the (batch, vocab) logits, and nowhere else."""
+    return P()
+
+
+def _fit_spec(spec: P, logical_shape: Tuple[int, ...],
+              stored_shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Re-fit a logical-layout spec onto a *stored* (packed) layout: keep
+    an axis assignment only where the stored dim still matches the
+    logical dim and divides; packed/reblocked dims replicate."""
+    base = tuple(spec) + (None,) * (len(stored_shape) - len(tuple(spec)))
+    out = []
+    for dim_l, dim_s, axes in zip(
+            logical_shape + (0,) * 9, stored_shape, base):
+        out.append(_maybe(mesh, dim_s, axes)
+                   if dim_s == dim_l else None)
+    return P(*out)
+
+
+def weight_store_specs(cfg: ArchConfig, mesh: Mesh, store: Any) -> Any:
+    """PartitionSpec tree for a ``serve.quant.quantize_tree`` store.
+
+    Each quantized leaf is ``{"q": codes, "scales": e8m0 bytes, "shape":
+    ..., ...}`` (``serve.quant._is_qleaf``): the spec is DERIVED from
+    the dense :func:`_param_rule` placement of the same path, re-fitted
+    onto the stored layout (bit-packing shrinks the last dim; the scale
+    store reblocks it) — a dim whose size changed replicates, everything
+    else shards exactly like the dense parameter it stores.  Metadata
+    entries (``fmt``/``shape``/``packed``) map to None; passthrough
+    (unquantized) leaves keep their dense rule."""
+    from repro.serve.quant import _is_qleaf
+
+    def visit(path, leaf):
+        names = _path_names(path)
+        if _is_qleaf(leaf):
+            logical = tuple(leaf["shape"])
+            base = _param_rule(names, logical, cfg, mesh)
+            out = {k: None for k in leaf}
+            out["q"] = _fit_spec(base, logical, leaf["q"].shape, mesh)
+            out["scales"] = _fit_spec(base, logical,
+                                      leaf["scales"].shape, mesh)
+            return out
+        return _param_rule(names, leaf.shape, cfg, mesh)
+
+    return jax.tree_util.tree_map_with_path(visit, store,
+                                            is_leaf=_is_qleaf)
+
+
+def weight_store_shardings(cfg: ArchConfig, mesh: Mesh, store: Any) -> Any:
+    return jax.tree.map(lambda s: named(mesh, s),
+                        weight_store_specs(cfg, mesh, store),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def device_put_store(store: Any, shardings: Any) -> Any:
+    """``jax.device_put`` a quantize_tree store onto its shardings,
+    leaving the non-array metadata entries (format strings, logical
+    shape tuples, packed flags) untouched — a whole-tree device_put
+    would try to place those as leaves."""
+    from repro.serve.quant import _is_qleaf
+
+    def put(x, sh):
+        if _is_qleaf(x):
+            return dict(x, q=jax.device_put(x["q"], sh["q"]),
+                        scales=jax.device_put(x["scales"], sh["scales"]))
+        return jax.device_put(x, sh)
+
+    return jax.tree.map(put, store, shardings, is_leaf=_is_qleaf)
+
+
+def serving_shardings(cfg: ArchConfig, mesh: Mesh, params, cache, state,
+                      weight_store=None) -> Dict[str, Any]:
+    """Every array the serving engine owns, mapped to an explicit
+    NamedSharding: dense params, the (possibly quantized) cache pool, the
+    slot-state leaves, the packed weight store, plus the sample-point
+    logits sharding and the fully-replicated sharding host-read outputs
+    use."""
+    out = {
+        "params": param_shardings(cfg, mesh, params),
+        "cache": cache_shardings(cfg, mesh, cache),
+        "state": state_shardings(mesh, state),
+        "logits": named(mesh, logits_spec(mesh)),
+        "replicated": named(mesh, P()),
+    }
+    if weight_store is not None:
+        out["weights"] = weight_store_shardings(cfg, mesh, weight_store)
+    return out
+
+
 # --------------------------------------------------------------------- #
 # Sizing report (used by the dry-run and tests)
 # --------------------------------------------------------------------- #
 
-def spec_local_bytes(shapes_tree, specs_tree, mesh: Mesh) -> int:
-    """Per-device bytes of a sharded pytree (exact, from specs)."""
-    total = 0
-    for leaf, spec in zip(jax.tree.leaves(shapes_tree),
-                          jax.tree.leaves(specs_tree,
-                                          is_leaf=lambda x: isinstance(x, P))):
-        n = leaf.dtype.itemsize
+def _leaf_bytes_per_element(leaf, fmt: Optional[str]) -> float:
+    """Storage B/elem for one leaf: the compat registry's *packed*
+    bytes/element when the leaf is a sub-byte store (fp4 0.5, fp6 0.75),
+    else ``dtype.itemsize``.  Using itemsize for a uint8 code leaf that
+    stands in for fp4/fp6 values over- or under-counts per-device
+    memory: a LOGICAL-shape fp4 leaf at itemsize 1 reports 2x its real
+    store, and a fp6 3-bytes-per-4 group has no itemsize at all."""
+    if fmt:
+        from repro import compat
+        return compat.storage_bytes_per_element(fmt, packed=True)
+    return float(leaf.dtype.itemsize)
+
+
+def spec_local_bytes(shapes_tree, specs_tree, mesh: Mesh,
+                     formats=None) -> int:
+    """Per-device bytes of a sharded pytree (exact, from specs).
+
+    ``formats``: optional — a format name (uniform: every leaf is stored
+    in that sub-byte format at its LOGICAL shape) or a tree matching
+    ``shapes_tree`` whose leaves are format names or None.  Sub-byte
+    leaves are accounted via the compat registry's
+    ``storage_bytes_per_element`` instead of ``dtype.itemsize``."""
+    is_p = lambda x: isinstance(x, P)
+    leaves = jax.tree.leaves(shapes_tree)
+    specs = jax.tree.leaves(specs_tree, is_leaf=is_p)
+    if formats is None or isinstance(formats, str):
+        fmts = [formats] * len(leaves)
+    else:
+        fmts = jax.tree.leaves(
+            formats, is_leaf=lambda x: x is None or isinstance(x, str))
+    total = 0.0
+    for leaf, spec, fmt in zip(leaves, specs, fmts):
+        n = _leaf_bytes_per_element(leaf, fmt)
         for dim, axes in zip(leaf.shape, tuple(spec) + (None,) * 99):
             div = axis_size(mesh, axes) if axes else 1
             n *= math.ceil(dim / div)
-        total += n
-    return total
+        total += math.ceil(n)
+    return int(total)

@@ -32,11 +32,24 @@ def main() -> None:
         txt = compiled.as_text()
         mem = compiled.memory_analysis()
 
-    pat = re.compile(r"\b(f32|bf16|f16|f8e4m3fn|f8e5m2|f4e2m1fn|s32|u32|s16|s8|u8|pred)"
+    from repro import compat
+
+    pat = re.compile(r"\b(f32|bf16|f16|f8e4m3fn|f8e5m2|f6e2m3fn|f6e3m2fn"
+                     r"|f4e2m1fn|s32|u32|s16|s8|u8|pred)"
                      r"\[([0-9,]+)\]")
-    bytes_per = {"f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2,
-                 "s16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1,
-                 "pred": 1, "f4e2m1fn": 1}
+    # sub-byte HBM stores are accounted at the compat registry's *packed*
+    # bytes/element (fp4 0.5, fp6 0.75) — the previous table charged
+    # f4e2m1fn a full byte, double-counting every fp4 weight/KV tensor
+    # in the per-device profile this tool exists to localize
+    bytes_per = {"f32": 4.0, "s32": 4.0, "u32": 4.0, "bf16": 2.0,
+                 "f16": 2.0, "s16": 2.0, "f8e4m3fn": 1.0, "f8e5m2": 1.0,
+                 "s8": 1.0, "u8": 1.0, "pred": 1.0}
+    for hlo_name, reg_name in (("f4e2m1fn", "float4_e2m1fn"),
+                               ("f6e2m3fn", "float6_e2m3fn"),
+                               ("f6e3m2fn", "float6_e3m2fn")):
+        bytes_per[hlo_name] = compat.storage_bytes_per_element(
+            reg_name, packed=True)
+
     counts = collections.Counter()
     for m in pat.finditer(txt):
         dt, dims = m.groups()

@@ -47,3 +47,34 @@ def make_smoke_mesh(model_axis: int = 1) -> Mesh:
     assert n % model_axis == 0
     return Mesh(np.array(devices).reshape(n // model_axis, model_axis),
                 ("data", "model"))
+
+
+def make_serving_mesh(shape) -> "Mesh | None":
+    """Mesh for ``ServeEngine(mesh=...)`` from a shape spec.
+
+    ``shape``: None (single-device engine, returns None), an int or
+    1-tuple (pure tensor parallel: axis ('model',)), or a 2-tuple
+    (('data', 'model') — slots over 'data', heads/vocab over 'model').
+    Also accepts a "2x2"-style string (the CLI/benchmark ``--mesh``
+    flag).  Uses the first prod(shape) devices, so it composes with
+    ``--xla_force_host_platform_device_count``."""
+    if shape is None:
+        return None
+    if isinstance(shape, str):
+        shape = tuple(int(p) for p in shape.lower().split("x"))
+    if isinstance(shape, int):
+        shape = (shape,)
+    shape = tuple(int(s) for s in shape)
+    if len(shape) not in (1, 2):
+        raise ValueError(f"serving mesh shape must be 1-D or 2-D, "
+                         f"got {shape}")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for serving mesh {shape}, have "
+            f"{len(devices)} — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} (before jax "
+            f"initializes) or shrink the mesh")
+    axes = ("model",) if len(shape) == 1 else ("data", "model")
+    return Mesh(np.array(devices[:n]).reshape(shape), axes)

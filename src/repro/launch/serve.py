@@ -2,14 +2,19 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch gptneox-1b --reduced \
         --requests 8 --batch 4 --max-new 16 --precision float8_e4m3fn
+
+Mesh-native serving: ``--mesh 2x2`` shards the engine over a
+('data', 'model') device mesh (``--mesh 4`` = pure TP on ('model',)).
+On a CPU host, pair it with ``--fake-devices N`` (must come before jax
+touches a backend, which is why this launcher parses args before
+importing anything that initializes jax).
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
-
-import jax
 
 
 def main() -> None:
@@ -29,12 +34,27 @@ def main() -> None:
     ap.add_argument("--precision", default="bfloat16",
                     help="float32|bfloat16|float8_e4m3fn|float8_e5m2|"
                          "float6_e2m3fn|float6_e3m2fn|float4_e2m1fn")
+    ap.add_argument("--mesh", default=None,
+                    help="serving mesh shape, e.g. 2x2 (data x model) "
+                         "or 4 (pure TP); omit for single-device")
+    ap.add_argument("--fake-devices", type=int, default=0,
+                    help="XLA host-platform fake device count (CPU mesh "
+                         "smoke runs); set before jax backend init")
     args = ap.parse_args()
 
+    if args.fake_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.fake_devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+
     from repro.configs import get_config
+    from repro.launch.mesh import make_serving_mesh
     from repro.models import build_model
     from repro.serve import ServeEngine, quantize_params
 
+    mesh = make_serving_mesh(args.mesh)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -43,13 +63,15 @@ def main() -> None:
     params, qstats = quantize_params(params, args.precision)
     print(f"[serve] {cfg.name} precision={args.precision} "
           f"quantized_bytes={qstats['quantized_bytes']/2**20:.1f} MiB "
-          f"rel-mse={qstats['mse']:.2e}")
+          f"rel-mse={qstats['mse']:.2e}"
+          + (f" mesh={dict(mesh.shape)}" if mesh is not None else ""))
 
     engine = ServeEngine(model, params, batch=args.batch,
                          max_seq=args.max_seq,
                          temperature=args.temperature,
                          decode_block=args.decode_block,
-                         prefill_chunk=args.prefill_chunk)
+                         prefill_chunk=args.prefill_chunk,
+                         mesh=mesh)
     key = jax.random.PRNGKey(1)
     for i in range(args.requests):
         key, sub = jax.random.split(key)

@@ -35,6 +35,14 @@ from repro.models.slotstate import mask_rows  # noqa: F401 — re-export;
 
 _NEG_INF = -1.0e30
 
+# Leaf names of a *quantized* ring cache (packed codes + 1-byte e8m0
+# scales — see :func:`init_kv_cache`).  Single source of truth shared
+# with ``repro.distributed.sharding.cache_rule`` so the mesh placement
+# rules cannot drift from the cache layout: payload leaves carry
+# (batch, capacity, heads, stored) like dense k/v, and the last dim is
+# packed storage (never shardable — sub-byte groups are device-local).
+QUANT_KV_LEAVES = ("k_q", "k_s", "v_q", "v_s")
+
 
 # --------------------------------------------------------------------- #
 # Projections

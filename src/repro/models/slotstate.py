@@ -45,6 +45,13 @@ import jax.numpy as jnp
 # through as-written.
 WRITE_SITE_MASKED = ("kv",)
 
+# The engine's device-resident per-slot bookkeeping leaves (one (batch,)
+# array each — see ``ServeEngine._init_state``).  Named here, at the
+# bottom of the model stack, so the mesh placement rules
+# (``repro.distributed.sharding.state_specs``) and the engine agree on
+# what the slot-state protocol owns.
+SLOT_STATE_FIELDS = ("pos", "remaining", "last_token", "active", "seed")
+
 # Parts written once at admission and only *read* during decode.
 READ_ONLY_IN_DECODE = ("cross_kv", "enc_out")
 

@@ -205,9 +205,10 @@ def ssm_forward(p: dict, x: jax.Array, cfg: ArchConfig,
             if s >= k1:
                 return r[:, s - k1:, :]
             return jnp.pad(r, ((0, 0), (k1 - s, 0), (0, 0)))
-        conv_state = jnp.concatenate(
-            [tail(xr), tail(br), tail(cr)], axis=-1).astype(x.dtype)
-        return out, (conv_state, state)
+        return out, {"conv_x": tail(xr).astype(x.dtype),
+                     "conv_b": tail(br).astype(x.dtype),
+                     "conv_c": tail(cr).astype(x.dtype),
+                     "state": state}
     return out
 
 
@@ -218,9 +219,9 @@ def ssm_prefill_chunk(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig,
     chunk boundaries — the SSM leg of chunked pooled prefill.
 
     x: (bt, s, d_model) chunk activations (zero-padded past ``valid_len``);
-    cache: this slot's ``{"conv", "state"}`` row (bt matches x);
-    valid: (s,) bool prefix mask; valid_len: traced scalar int32.
-    Returns (out (bt, s, d_model), advanced cache row).
+    cache: this slot's ``{"conv_x", "conv_b", "conv_c", "state"}`` row
+    (bt matches x); valid: (s,) bool prefix mask; valid_len: traced
+    scalar int32.  Returns (out (bt, s, d_model), advanced cache row).
 
     Exactness: the depthwise convs run over ``[carried conv inputs | this
     chunk's raw inputs]`` and drop the first k-1 outputs, so every kept
@@ -234,13 +235,18 @@ def ssm_prefill_chunk(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig,
     """
     bt, s, _ = x.shape
     h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
-    d_in = cfg.d_inner
     k1 = cfg.ssm_conv - 1
     z, xr, br, cr, dt_raw = _project(p, x)
-    raw = jnp.concatenate([xr, br, cr], axis=-1)          # (bt, s, C)
-    full = jnp.concatenate([cache["conv"].astype(raw.dtype), raw], axis=1)
-    fx, fb, fc = full[..., :d_in], full[..., d_in:d_in + n], \
-        full[..., d_in + n:]
+    # Per-section carries concatenated along the SEQUENCE axis only.  The
+    # old single-leaf layout concatenated [xr|br|cr] along channels; a
+    # concatenate whose axis is sharded (d_inner rides the 'model' axis
+    # under TP) miscompiles in XLA's SPMD partitioner on >2-device
+    # meshes (wrong values, not a perf issue — see test_serve_sharded),
+    # and sectioned carries are the layout TP wants anyway: conv_x
+    # shards with wx/conv_x_w, the tiny B/C sections stay replicated.
+    fx = jnp.concatenate([cache["conv_x"].astype(xr.dtype), xr], axis=1)
+    fb = jnp.concatenate([cache["conv_b"].astype(br.dtype), br], axis=1)
+    fc = jnp.concatenate([cache["conv_c"].astype(cr.dtype), cr], axis=1)
     xh = jax.nn.silu(causal_conv1d(fx, p["conv_x_w"], p["conv_x_b"])[:, k1:])
     b_ = jax.nn.silu(causal_conv1d(fb, p["conv_b_w"], p["conv_b_b"])[:, k1:])
     c_ = jax.nn.silu(causal_conv1d(fc, p["conv_c_w"], p["conv_c_b"])[:, k1:])
@@ -267,20 +273,28 @@ def ssm_prefill_chunk(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig,
     y = y.reshape(bt, s, h * pd).astype(x.dtype)
     y = rms_norm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
     out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
-    # carried conv inputs: the k-1 raw rows ending at valid_len.  In
-    # ``full`` indexing the chunk's raw row j sits at k1 + j, so rows
-    # [valid_len, valid_len + k1) are raw[valid_len - k1 : valid_len]
-    # (reaching into the previous carry when valid_len < k1) — a traced
-    # start with a static size.
-    new_conv = jax.lax.dynamic_slice_in_dim(full, valid_len, k1, axis=1)
-    return out, {"conv": new_conv.astype(cache["conv"].dtype),
+    # carried conv inputs: the k-1 raw rows ending at valid_len.  In the
+    # ``[carry | raw]`` seq indexing the chunk's raw row j sits at
+    # k1 + j, so rows [valid_len, valid_len + k1) are
+    # raw[valid_len - k1 : valid_len] (reaching into the previous carry
+    # when valid_len < k1) — a traced start with a static size.
+    def carry(fs, old):
+        sl = jax.lax.dynamic_slice_in_dim(fs, valid_len, k1, axis=1)
+        return sl.astype(old.dtype)
+    return out, {"conv_x": carry(fx, cache["conv_x"]),
+                 "conv_b": carry(fb, cache["conv_b"]),
+                 "conv_c": carry(fc, cache["conv_c"]),
                  "state": state}
 
 
 def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
-    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    """Sectioned depthwise-conv carry (one leaf per conv input stream —
+    see the layout note in :func:`ssm_prefill_chunk`) + fp32 SSD state."""
+    k1 = cfg.ssm_conv - 1
     return {
-        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "conv_x": jnp.zeros((batch, k1, cfg.d_inner), dtype),
+        "conv_b": jnp.zeros((batch, k1, cfg.ssm_state), dtype),
+        "conv_c": jnp.zeros((batch, k1, cfg.ssm_state), dtype),
         "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
                             cfg.ssm_state), jnp.float32),
     }
@@ -291,13 +305,13 @@ def ssm_decode(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig
     """One-token recurrence.  x: (bt, 1, d_model)."""
     bt = x.shape[0]
     h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
-    d_in = cfg.d_inner
     z, xr, br, cr, dt_raw = _project(p, x)
-    # conv over (k-1) cached raw inputs + this one (channels: [x | B | C])
-    raw = jnp.concatenate([xr, br, cr], axis=-1)      # (bt,1,conv_dim)
-    window = jnp.concatenate([cache["conv"], raw], axis=1)  # (bt,k,C)
-    wx, wb_, wc_ = window[..., :d_in], window[..., d_in:d_in + n], \
-        window[..., d_in + n:]
+    # conv over (k-1) cached raw inputs + this one, per section — the
+    # window concats run along the SEQUENCE axis, never across channel
+    # sections (see the TP layout note in ssm_prefill_chunk)
+    wx = jnp.concatenate([cache["conv_x"], xr], axis=1)      # (bt,k,d_in)
+    wb_ = jnp.concatenate([cache["conv_b"], br], axis=1)     # (bt,k,n)
+    wc_ = jnp.concatenate([cache["conv_c"], cr], axis=1)
     xh = jax.nn.silu(jnp.einsum("bkc,ck->bc", wx, p["conv_x_w"])
                      + p["conv_x_b"])[:, None, :]
     b_ = jax.nn.silu(jnp.einsum("bkc,ck->bc", wb_, p["conv_b_w"])
@@ -316,5 +330,6 @@ def ssm_decode(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig
     y = y.reshape(bt, 1, h * pd).astype(x.dtype)
     y = rms_norm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
     out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
-    new_cache = {"conv": window[:, 1:, :], "state": state}
+    new_cache = {"conv_x": wx[:, 1:, :], "conv_b": wb_[:, 1:, :],
+                 "conv_c": wc_[:, 1:, :], "state": state}
     return out, new_cache

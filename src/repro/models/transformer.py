@@ -445,10 +445,10 @@ def lm_prefill(params: dict, batch: Dict[str, jax.Array], cfg: ArchConfig,
                     entry["cross_kv"] = ckv
             elif blk.mixer == "ssm":
                 h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
-                out, (conv_state, ssm_state) = ssm_lib.ssm_forward(
+                out, ssm_cache = ssm_lib.ssm_forward(
                     p["ssm"], h, cfg, return_state=True)
                 x = x + out
-                entry["ssm"] = {"conv": conv_state, "state": ssm_state}
+                entry["ssm"] = ssm_cache
             if blk.ffn == "dense":
                 h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
                 x = x + apply_mlp(p["mlp"], h, cfg.mlp_variant)

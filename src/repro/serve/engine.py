@@ -66,7 +66,9 @@ from typing import Deque, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
+from repro.distributed import sharding as shard_rules
 from repro.models.model import Model, build_model
 from repro.serve.quant import dequantize_tree, quantize_tree
 from repro.serve.sampler import sample_tokens
@@ -106,7 +108,8 @@ class ServeEngine:
                  weight_format: Optional[str] = None, packed: bool = True,
                  kv_format=None, compute_dtype=jnp.bfloat16,
                  decode_block: int = 16, prefill_chunk: int = 32,
-                 enc_len: Optional[int] = None):
+                 enc_len: Optional[int] = None,
+                 mesh: Optional[Mesh] = None):
         if kv_format:
             # rebind the model onto a config whose cache layer quantizes:
             # every prefill/decode below then writes packed codes +
@@ -159,21 +162,69 @@ class ServeEngine:
         # device-resident slot state
         self.state = self._init_state()
 
+        # mesh-native placement: with a mesh, EVERY array the engine owns
+        # gets an explicit NamedSharding from the distributed/sharding
+        # rules (params per _param_rule, KV/cross-KV/SSM pools per
+        # cache_rule, packed weight store re-fitted onto stored layouts,
+        # slot state replicated) before the first executable is built —
+        # the jits below then pin their outputs to the same placements,
+        # so steady-state serving never triggers a resharding transfer.
+        # mesh=None is the exact single-device engine (no placement, no
+        # out_shardings, byte-identical dispatch path).
+        self.mesh = mesh
+        self._sh: Optional[Dict] = None
+        if mesh is not None:
+            self._sh = shard_rules.serving_shardings(
+                model.cfg, mesh, self.params, self.cache, self.state,
+                self.weight_store)
+            self.params = jax.device_put(self.params, self._sh["params"])
+            if self.weight_store is not None:
+                self.weight_store = shard_rules.device_put_store(
+                    self.weight_store, self._sh["weights"])
+            self.cache = jax.device_put(self.cache, self._sh["cache"])
+            self.state = jax.device_put(self.state, self._sh["state"])
+            self._sample_key = jax.device_put(self._sample_key,
+                                              self._sh["replicated"])
+
         # jitted executables (shared across reset(); decode loops are
         # cached per fused length K).  One executable per admission step
         # kind — token chunks, embed chunks (VLM), encode (enc-dec) —
         # each compiled exactly once (the sanitizer asserts this).
+        repl = self._sh["replicated"] if mesh is not None else None
+        cache_sh = self._sh["cache"] if mesh is not None else None
+        state_sh = self._sh["state"] if mesh is not None else None
         self._loops: Dict[int, jax.stages.Wrapped] = {}
-        self._prefill_chunk_fn = jax.jit(model.prefill_chunk)
+        self._prefill_chunk_fn = self._jit(model.prefill_chunk,
+                                           (repl, cache_sh))
         if model.cfg.frontend == "vision":
-            self._prefill_embeds_fn = jax.jit(
+            self._prefill_embeds_fn = self._jit(
                 lambda p, c, emb, slot, off, vl: model.prefill_chunk(
                     p, c, jnp.zeros((emb.shape[1],), jnp.int32), slot,
-                    off, vl, embeds=emb))
+                    off, vl, embeds=emb),
+                (repl, cache_sh))
         if model.cfg.is_encoder_decoder:
-            self._encode_slot_fn = jax.jit(model.encode_slot)
-        self._clear_slot_fn = jax.jit(model.clear_slot)
-        self._admit_fn = jax.jit(self._admit_update)
+            self._encode_slot_fn = self._jit(model.encode_slot, cache_sh)
+        self._clear_slot_fn = self._jit(model.clear_slot, cache_sh)
+        self._admit_fn = self._jit(self._admit_update, (repl, state_sh))
+
+    def _jit(self, fn, out_shardings=None):
+        """jax.jit, pinning outputs to their serving shardings when the
+        engine is mesh-native (mesh=None compiles exactly as before)."""
+        if self.mesh is None:
+            return jax.jit(fn)
+        return jax.jit(fn, out_shardings=out_shardings)
+
+    def _host_read(self, x) -> np.ndarray:
+        """The engine's ONE designed device→host sync point per dispatch.
+
+        Mesh-native outputs are replicated (their jits pin P() output
+        shardings), so shard 0 already holds the full array — read it
+        through the single-device buffer path instead of np.asarray on
+        the multi-device Array (which routes through ``._value``, i.e.
+        an implicit cross-device fetch the sanitizer rightly counts)."""
+        if self.mesh is not None:
+            return np.asarray(x.addressable_data(0))
+        return np.asarray(x)
 
     # sampling params are traced INTO the compiled loop/admit
     # executables — mutating them after construction would be silently
@@ -203,6 +254,9 @@ class ServeEngine:
         self.cache = self.model.init_cache(self.batch, self.max_seq,
                                            enc_len=self.enc_len)
         self.state = self._init_state()
+        if self.mesh is not None:
+            self.cache = jax.device_put(self.cache, self._sh["cache"])
+            self.state = jax.device_put(self.state, self._sh["state"])
         self.slot_req = [None] * self.batch
         self.out_tokens = [[] for _ in range(self.batch)]
         self.queue = collections.deque()
@@ -329,7 +383,7 @@ class ServeEngine:
                 jnp.int32(req.trunk_len), jnp.int32(req.max_new_tokens),
                 jnp.int32(req.request_id), self._sample_key)
             self.slot_req[slot] = req
-            self.out_tokens[slot] = [int(tok)]
+            self.out_tokens[slot] = [int(self._host_read(tok))]
             if req.max_new_tokens <= 1:
                 self._finish(slot)
 
@@ -340,6 +394,10 @@ class ServeEngine:
         emitted-mask (k, b)) plus the advanced cache/state."""
         model = self.model
         temp, top_k, max_seq = self.temperature, self.top_k, self.max_seq
+        # mesh-native: decode leaves logits vocab-sharded over 'model'
+        # (the unembed placement); the sample point is the loop's ONE
+        # all-gather, after which tokens and bookkeeping are replicated
+        logits_sh = self._sh["logits"] if self.mesh is not None else None
 
         def loop(params, cache, state, key):
             def body(carry, _):
@@ -350,7 +408,8 @@ class ServeEngine:
                     active=active)
                 nxt = st["pos"] + 1
                 tok = sample_tokens(logits, key, temp, top_k,
-                                    slot_seed=st["seed"], pos=nxt)
+                                    slot_seed=st["seed"], pos=nxt,
+                                    logits_sharding=logits_sh)
                 tok = jnp.where(active, tok, st["last_token"])
                 new_pos = jnp.where(active, nxt, st["pos"])
                 new_rem = st["remaining"] - active.astype(jnp.int32)
@@ -365,7 +424,11 @@ class ServeEngine:
                 body, (cache, state), xs=None, length=k)
             return cache, state, toks, emitted
 
-        return jax.jit(loop)
+        if self.mesh is None:
+            return jax.jit(loop)
+        return jax.jit(loop, out_shardings=(
+            self._sh["cache"], self._sh["state"],
+            self._sh["replicated"], self._sh["replicated"]))
 
     def _any_active(self) -> bool:
         return any(r is not None for r in self.slot_req)
@@ -399,9 +462,9 @@ class ServeEngine:
             fn = self._loops[k] = self._make_decode_loop(k)
         self.cache, self.state, toks, emitted = fn(
             self.params, self.cache, self.state, self._sample_key)
-        toks = np.asarray(toks)                       # (k, b) — ONE sync
-        emitted = np.asarray(emitted)
-        active_after = np.asarray(self.state["active"])
+        toks = self._host_read(toks)                  # (k, b) — ONE sync
+        emitted = self._host_read(emitted)
+        active_after = self._host_read(self.state["active"])
         for slot in range(self.batch):
             if self.slot_req[slot] is None:
                 continue

@@ -58,14 +58,28 @@ def fold_slot_keys(key: jax.Array, slot_seed: jax.Array,
 def sample_tokens(logits: jax.Array, key: Optional[jax.Array] = None,
                   temperature: float = 0.0, top_k: int = 0,
                   slot_seed: Optional[jax.Array] = None,
-                  pos: Optional[jax.Array] = None) -> jax.Array:
+                  pos: Optional[jax.Array] = None,
+                  logits_sharding=None) -> jax.Array:
     """Batched in-loop sampling: logits (b, v) -> tokens (b,).
 
     Greedy (temperature 0) needs no key.  Otherwise each row samples
     under its own folded key (see :func:`fold_slot_keys`); when
     ``slot_seed``/``pos`` are omitted it falls back to one shared key
     (rows still sample independently via ``jax.random.categorical``).
+
+    ``logits_sharding``: optional NamedSharding (normally the fully
+    replicated ``distributed.sharding.logits_spec``) constrained onto
+    the logits before sampling — THE sample-point gather of a
+    mesh-sharded engine.  Decode leaves logits vocab-sharded over
+    'model' (the unembed placement); argmax and the per-row folded
+    categorical must each see every vocab column and produce one
+    mesh-independent token stream, so the all-gather happens here,
+    exactly once, and the token/bookkeeping arithmetic downstream of it
+    is replicated — which is what keeps ``fold_slot_keys`` sampling
+    batch- and mesh-independent.
     """
+    if logits_sharding is not None:
+        logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     assert key is not None, "sampling needs a PRNG key"

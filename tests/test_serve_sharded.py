@@ -1,0 +1,128 @@
+"""Tier-1 mesh-native serving suite.
+
+The multi-device halves run ``tests/sharded_cases.py`` in a subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` pinned in
+the child's environment — the flag must precede the first jax backend
+init, and this process (via conftest) has already initialized a
+single-device backend.  The in-process half covers the sharding *rules*
+(no devices needed): the packed sub-byte local-bytes accounting that
+``launch/memdiag.py`` and the serving memory plans consume.
+"""
+
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CASES = os.path.join(REPO, "tests", "sharded_cases.py")
+
+
+def _run_case(*names):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                        + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, CASES, *names],
+                          capture_output=True, text=True, env=env,
+                          cwd=REPO, timeout=1800)
+    assert proc.returncode == 0, (
+        f"sharded case(s) {names} failed:\n--- stdout ---\n"
+        f"{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    for name in names:
+        assert f"CASE_OK {name}" in proc.stdout, proc.stdout
+
+
+@pytest.mark.slow
+def test_greedy_identity_attn_kv_formats():
+    """gptneox greedy streams bit-identical for mesh None/(2,)/(2,2) and
+    fused-vs-per-step on 2x2, across KV formats none/fp8/fp4 plus the
+    bit-packed fp4 weight store."""
+    _run_case("greedy_attn")
+
+
+@pytest.mark.slow
+def test_greedy_identity_ssm_hybrid():
+    _run_case("greedy_ssm_hybrid")
+
+
+@pytest.mark.slow
+def test_greedy_identity_encdec_vlm():
+    _run_case("greedy_encdec_vlm")
+
+
+@pytest.mark.slow
+def test_sharded_logits_and_chunked_prefill():
+    _run_case("logits_and_prefill")
+
+
+@pytest.mark.slow
+def test_sanitize_and_contracts_sharded():
+    _run_case("sanitize_sharded", "contracts_sharded")
+
+
+# ---------------------------------------------------------------------------
+# in-process: packed-leaf local-bytes accounting (rule arithmetic only)
+
+
+class FakeMesh:
+    def __init__(self, shape_map):
+        self.shape = shape_map
+        self.axis_names = tuple(shape_map)
+
+
+MESH = FakeMesh({"data": 2, "model": 2})
+
+
+def test_spec_local_bytes_packed_leaves():
+    """A bit-packed fp4 leaf stores 0.5 B/elem — ``spec_local_bytes``
+    must charge the registry's storage width, not ``uint8.itemsize``
+    on the packed container (which would double-count fp4, the old
+    memdiag bug) and not the logical dtype width."""
+    shapes = {"q": jax.ShapeDtypeStruct((64, 32), jnp.uint8)}
+    specs = {"q": P("data", "model")}
+    dense = shd.spec_local_bytes(shapes, specs, MESH)
+    assert dense == (64 // 2) * (32 // 2) * 1
+    # same leaf declared as packed fp4 payload: half a byte per LOGICAL
+    # element; the uint8 container already holds 2 values/byte, so the
+    # formats tree is keyed by what the bytes MEAN, not what they claim
+    fp4 = shd.spec_local_bytes(shapes, specs, MESH,
+                               formats={"q": "float4_e2m1fn"})
+    assert fp4 == math.ceil((64 // 2) * (32 // 2) * 0.5)
+    fp6 = shd.spec_local_bytes(shapes, specs, MESH,
+                               formats={"q": "float6_e2m3fn"})
+    assert fp6 == math.ceil((64 // 2) * (32 // 2) * 0.75)
+
+
+def test_spec_local_bytes_uniform_format_and_mixed_tree():
+    shapes = {"w": jax.ShapeDtypeStruct((16, 16), jnp.uint8),
+              "s": jax.ShapeDtypeStruct((16, 1), jnp.float32)}
+    specs = {"w": P("model", None), "s": P("model", None)}
+    # uniform string applies to every leaf
+    n = shd.spec_local_bytes(shapes, specs, MESH,
+                             formats="float4_e2m1fn")
+    assert n == math.ceil(8 * 16 * 0.5) + math.ceil(8 * 1 * 0.5)
+    # per-leaf tree: packed codes next to dense float scales (the real
+    # quantized-KV layout)
+    n = shd.spec_local_bytes(shapes, specs, MESH,
+                             formats={"w": "float4_e2m1fn", "s": None})
+    assert n == math.ceil(8 * 16 * 0.5) + 8 * 1 * 4
+
+
+def test_serving_state_and_logits_rules():
+    """Slot state and sample-point logits are replicated by rule — the
+    host-side scheduler reads them with one addressable shard."""
+    from repro.models.slotstate import SLOT_STATE_FIELDS
+
+    for name in SLOT_STATE_FIELDS:
+        assert tuple(shd.state_rule(name, MESH)) == ()
+    assert tuple(shd.logits_spec(MESH)) == ()

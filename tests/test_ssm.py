@@ -59,9 +59,7 @@ def test_decode_matches_forward(key):
     cfg = MAMBA2_2P7B.reduced()
     p = S.init_ssm(key, cfg, jnp.float32)
     x = jax.random.normal(key, (2, 24, cfg.d_model)) * 0.1
-    y_full, (conv_state, ssm_state) = S.ssm_forward(p, x[:, :16], cfg,
-                                                    return_state=True)
-    cache = {"conv": conv_state, "state": ssm_state}
+    y_full, cache = S.ssm_forward(p, x[:, :16], cfg, return_state=True)
     outs = []
     for t in range(16, 24):
         y_t, cache = S.ssm_decode(p, x[:, t:t + 1], cache, cfg)
