@@ -26,6 +26,7 @@ MODULES = [
     "tab7_gemm",
     "tab8_inference",
     "serve_throughput",
+    "serve_scenarios",
     "collectives_bench",
     "roofline_table",
     "paper_claims",

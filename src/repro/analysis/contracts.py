@@ -30,7 +30,10 @@ jaxpr.  So we check the jaxpr.
 
 :func:`check_entry_points` wires these to the serving hot paths named
 in the ROADMAP: ``lm_decode_step``, the fused ``decode_loop`` scan
-body, ``lm_prefill_chunk``, ``qmatmul_packed``, ``flash_decode_quant``.
+body (which now carries the fault injector + non-finite sentinel),
+``lm_prefill_chunk``, ``qmatmul_packed``, ``flash_decode_quant``, and
+the robustness state-writes (``cancel_update``/``fault_arm_update``)
+plus the cache poisoners from ``repro.serve.faults``.
 """
 
 from __future__ import annotations
@@ -384,6 +387,34 @@ def check_entry_points(kv_format: str = "float4_e2m1fn",
         lambda qq, kv, pp: ops.flash_decode_quant(qq, kv, pp, fmt="float4_e2m1fn",
                                                   bk=8),
         (q, kv_cache, pos), "flash_decode_quant")
+
+    # Robustness entry points (serving-under-fire layer): the cancel and
+    # fault-arm slot-state writes dispatched on deadline expiry /
+    # cancellation / chaos arming, and the cache poisoners that corrupt
+    # a slot's quantized KV in place.  Same contract as every other hot
+    # path — no packed payload upcasts, no host callbacks — plus CT303
+    # on the poisoners: a fault injector that silently WIDENED the cache
+    # it corrupts would invalidate every bytes/elem claim downstream.
+    from repro.serve import faults as fault_lib
+
+    slot0 = jnp.int32(0)
+    findings += contract_findings(
+        eng._cancel_update, (eng.state, slot0), "cancel_update")
+    findings += contract_findings(
+        eng._fault_arm_update,
+        (eng.state, slot0, jnp.int32(5), jnp.int32(1)),
+        "fault_arm_update")
+    findings += contract_findings(
+        fault_lib.overflow_e8m0_scales, (eng.cache, slot0),
+        "fault_e8m0_overflow")
+    findings += cache_width_findings(
+        fault_lib.overflow_e8m0_scales, (eng.cache, slot0),
+        "fault_e8m0_overflow", cache_out_index=0)
+    findings += contract_findings(
+        fault_lib.flip_kv_bytes, (eng.cache, slot0), "fault_kv_bitflip")
+    findings += cache_width_findings(
+        fault_lib.flip_kv_bytes, (eng.cache, slot0), "fault_kv_bitflip",
+        cache_out_index=0)
 
     # Mesh-native serving entry points: the same fused loop + chunked
     # prefill, but compiled through the sharded wrappers.  The packed

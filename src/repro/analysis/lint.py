@@ -121,6 +121,8 @@ DEFAULT_TRACED_ROOTS: Dict[str, Set[str]] = {
     "serve/quant.py": {"quantize_blockwise", "dequantize_blockwise"},
     "serve/sampler.py": {"sample_token", "sample_tokens",
                          "fold_slot_keys"},
+    "serve/faults.py": {"overflow_e8m0_scales", "flip_kv_bytes",
+                        "poison_recurrent_state"},
     "repro/lowbits.py": {
         "decode", "quantize_values", "encode_codes", "unpack_codes",
         "e8m0_decode", "e8m0_scale_code",

@@ -96,3 +96,35 @@ def make_stream(cfg: ArchConfig, shape: ShapeConfig,
                 data_cfg: Optional[SyntheticConfig] = None,
                 ) -> SyntheticStream:
     return SyntheticStream(cfg, shape, data_cfg or SyntheticConfig())
+
+
+def host_prompt(length: int, seed: int, vocab_size: int,
+                kind: str = "affine",
+                data_cfg: SyntheticConfig = SyntheticConfig()) -> list:
+    """One deterministic prompt as a host-side Python list.
+
+    Same task kinds as :class:`SyntheticStream` but generated with seeded
+    NumPy on the host — serving-side arrival traces must never touch
+    device RNG or wall-clock inside traced scope (lint rule JL104), and
+    a list of ints is exactly what ``ServeEngine.submit`` takes.
+    """
+    if length < 1:
+        raise ValueError("prompt length must be >= 1")
+    rng = np.random.default_rng(seed)
+    d = data_cfg
+    if kind == "uniform":
+        return rng.integers(0, vocab_size, size=length).tolist()
+    if kind == "zipf":
+        ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+        p = ranks ** -d.zipf_alpha
+        p /= p.sum()
+        return rng.choice(vocab_size, size=length, p=p).tolist()
+    if kind != "affine":
+        raise ValueError(f"unknown prompt kind {kind!r}")
+    v = min(d.affine_vocab, vocab_size)
+    t = int(rng.integers(0, v))
+    out = [t]
+    for _ in range(length - 1):
+        t = (d.affine_a * t + d.affine_b) % v
+        out.append(t)
+    return out

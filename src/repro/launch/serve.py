@@ -8,6 +8,16 @@ Mesh-native serving: ``--mesh 2x2`` shards the engine over a
 On a CPU host, pair it with ``--fake-devices N`` (must come before jax
 touches a backend, which is why this launcher parses args before
 importing anything that initializes jax).
+
+Traffic mode: ``--scenario poisson|bursty|ramp`` replays a seeded
+arrival trace (``repro.serve.traffic``) instead of pre-enqueueing
+``--requests`` prompts, reporting TTFT/per-token tails, goodput, and
+exact status accounting.  ``--queue-limit``/``--policy``/
+``--deadline-ms`` bound the admission queue in either mode:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gptneox-1b \
+        --reduced --scenario ramp --queue-limit 4 --policy shed_oldest \
+        --deadline-ms 500
 """
 
 from __future__ import annotations
@@ -40,6 +50,22 @@ def main() -> None:
     ap.add_argument("--fake-devices", type=int, default=0,
                     help="XLA host-platform fake device count (CPU mesh "
                          "smoke runs); set before jax backend init")
+    ap.add_argument("--scenario", default=None,
+                    choices=["poisson", "bursty", "ramp"],
+                    help="replay a seeded arrival trace instead of "
+                         "pre-enqueueing --requests prompts")
+    ap.add_argument("--scenario-seed", type=int, default=0)
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bound the admission queue (queued requests; "
+                         "in-flight slots are bounded by --batch)")
+    ap.add_argument("--policy", default="reject",
+                    choices=["reject", "shed_oldest", "block"],
+                    help="what a full queue does to the next submit")
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=["fifo", "spf"])
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline from submit; expired "
+                         "requests finish as deadline_exceeded")
     args = ap.parse_args()
 
     if args.fake_devices:
@@ -52,7 +78,9 @@ def main() -> None:
     from repro.configs import get_config
     from repro.launch.mesh import make_serving_mesh
     from repro.models import build_model
-    from repro.serve import ServeEngine, quantize_params
+    from repro.serve import (AdmissionConfig, ServeEngine,
+                             quantize_params, replay)
+    from repro.serve.traffic import TRACES
 
     mesh = make_serving_mesh(args.mesh)
     cfg = get_config(args.arch)
@@ -66,12 +94,44 @@ def main() -> None:
           f"rel-mse={qstats['mse']:.2e}"
           + (f" mesh={dict(mesh.shape)}" if mesh is not None else ""))
 
+    admission = None
+    if (args.queue_limit is not None or args.deadline_ms is not None
+            or args.policy != "reject" or args.scheduler != "fifo"):
+        admission = AdmissionConfig(
+            queue_limit=args.queue_limit, policy=args.policy,
+            scheduler=args.scheduler, deadline_ms=args.deadline_ms)
     engine = ServeEngine(model, params, batch=args.batch,
                          max_seq=args.max_seq,
                          temperature=args.temperature,
                          decode_block=args.decode_block,
                          prefill_chunk=args.prefill_chunk,
-                         mesh=mesh)
+                         mesh=mesh, admission=admission)
+
+    if args.scenario:
+        trace_args = {
+            "poisson": dict(n=args.requests, rate=200.0),
+            "bursty": dict(n_bursts=max(args.requests // 8, 1),
+                           burst_size=8, gap_s=0.25),
+            "ramp": dict(n=args.requests, rate0=5.0, rate1=400.0),
+        }[args.scenario]
+        sc = TRACES[args.scenario](
+            vocab_size=cfg.vocab_size, seed=args.scenario_seed,
+            deadline_ms=args.deadline_ms, **trace_args)
+        rep = replay(engine, sc, k=args.decode_block)
+        print(f"[serve] scenario={rep.scenario} policy={rep.policy}/"
+              f"{rep.scheduler} K={rep.k} submitted={rep.submitted} "
+              f"by_status={rep.by_status}")
+
+        def _ms(x):
+            return "-" if x is None else f"{1e3 * x:.1f}ms"
+        print(f"[serve] goodput={rep.goodput_tok_s:.1f} tok/s "
+              f"ttft p50/p99={_ms(rep.ttft_p50)}/{_ms(rep.ttft_p99)} "
+              f"tpt p50/p99={_ms(rep.tpt_p50)}/{_ms(rep.tpt_p99)} "
+              f"accounting_ok={rep.accounting_ok}")
+        if not rep.accounting_ok:
+            raise SystemExit("[serve] accounting identity violated")
+        return
+
     key = jax.random.PRNGKey(1)
     for i in range(args.requests):
         key, sub = jax.random.split(key)

@@ -50,7 +50,8 @@ WRITE_SITE_MASKED = ("kv",)
 # bottom of the model stack, so the mesh placement rules
 # (``repro.distributed.sharding.state_specs``) and the engine agree on
 # what the slot-state protocol owns.
-SLOT_STATE_FIELDS = ("pos", "remaining", "last_token", "active", "seed")
+SLOT_STATE_FIELDS = ("pos", "remaining", "last_token", "active", "seed",
+                     "fault_pos", "fault_kind")
 
 # Parts written once at admission and only *read* during decode.
 READ_ONLY_IN_DECODE = ("cross_kv", "enc_out")

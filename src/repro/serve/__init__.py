@@ -1,4 +1,5 @@
-"""Serving stack: samplers, quantization, batched engine."""
+"""Serving stack: samplers, quantization, batched engine, admission
+control, fault injection, and the traffic scenario harness."""
 
 from repro.serve.sampler import (  # noqa: F401
     fold_slot_keys,
@@ -14,4 +15,25 @@ from repro.serve.quant import (  # noqa: F401
     quantize_params,
     quantize_tree,
 )
-from repro.serve.engine import ServeEngine, GenerationResult  # noqa: F401
+from repro.serve.admission import (  # noqa: F401
+    AdmissionConfig,
+    AdmissionQueue,
+    POLICIES,
+    QueueFull,
+    SCHEDULERS,
+)
+from repro.serve.faults import FAULT_KINDS  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    GenerationResult,
+    STATUSES,
+    ServeEngine,
+)
+from repro.serve.traffic import (  # noqa: F401
+    Arrival,
+    Scenario,
+    ScenarioReport,
+    bursty_trace,
+    overload_ramp_trace,
+    poisson_trace,
+    replay,
+)

@@ -59,9 +59,10 @@ leg (``repro.kernels.flash_decode_quant``).
 
 from __future__ import annotations
 
-import collections
 import dataclasses
-from typing import Deque, Dict, List, Optional
+import functools
+import time
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,8 +71,23 @@ from jax.sharding import Mesh
 
 from repro.distributed import sharding as shard_rules
 from repro.models.model import Model, build_model
+from repro.serve import faults as fault_lib
+from repro.serve.admission import AdmissionConfig, AdmissionQueue, QueueFull
 from repro.serve.quant import dequantize_tree, quantize_tree
 from repro.serve.sampler import sample_tokens
+
+# terminal request states; every submitted request ends in exactly one
+STATUSES = ("ok",                  # full generation delivered
+            "truncated",           # run() step budget hit mid-generation
+            "shed",                # dropped by admission policy / cancel
+            "deadline_exceeded",   # deadline passed (queued or in-flight)
+            "faulted")             # in-loop sentinel caught non-finite
+                                   # logits; slot recovered via clear_slot
+
+# emitted-mask codes carried out of the fused scan per (step, slot)
+EMIT_NONE = 0      # slot inactive this step
+EMIT_TOKEN = 1     # token sampled and appended
+EMIT_FAULT = 2     # sentinel tripped: logits went non-finite
 
 
 @dataclasses.dataclass
@@ -79,7 +95,20 @@ class GenerationResult:
     request_id: int
     prompt: List[int]
     tokens: List[int]
-    truncated: bool = False       # run() step budget hit mid-generation
+    status: str = "ok"
+    submit_t: Optional[float] = None       # engine-clock timestamps
+    first_token_t: Optional[float] = None  # (None when not applicable:
+    finish_t: Optional[float] = None       # e.g. shed before prefill)
+
+    @property
+    def truncated(self) -> bool:
+        return self.status == "truncated"
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.submit_t is None or self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
 
 
 @dataclasses.dataclass
@@ -89,6 +118,9 @@ class _Request:
     max_new_tokens: int
     frames: Optional[np.ndarray] = None    # enc-dec source embeddings
     patches: Optional[np.ndarray] = None   # VLM patch-prefix embeddings
+    submit_t: float = 0.0                  # engine-clock timestamps
+    deadline_s: Optional[float] = None     # absolute (engine clock)
+    first_token_t: Optional[float] = None
 
     @property
     def trunk_len(self) -> int:
@@ -109,7 +141,9 @@ class ServeEngine:
                  kv_format=None, compute_dtype=jnp.bfloat16,
                  decode_block: int = 16, prefill_chunk: int = 32,
                  enc_len: Optional[int] = None,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 admission: Optional[AdmissionConfig] = None,
+                 clock: Optional[Callable[[], float]] = None):
         if kv_format:
             # rebind the model onto a config whose cache layer quantizes:
             # every prefill/decode below then writes packed codes +
@@ -152,12 +186,25 @@ class ServeEngine:
         # step actually reads) — reported by Tab VIII next to weights
         self.kv_stats: Dict = model.kv_cache_stats(self.cache)
 
-        # host-side request bookkeeping (no per-token state here)
+        # host-side request bookkeeping (no per-token state here).  The
+        # queue enforces the admission policy (bounded capacity, overload
+        # shedding, deadlines, scheduler) entirely on the host — every
+        # (policy, scheduler, deadline) combination reuses the exact same
+        # compiled executables.
         self.slot_req: List[Optional[_Request]] = [None] * batch
         self.out_tokens: List[List[int]] = [[] for _ in range(batch)]
-        self.queue: Deque[_Request] = collections.deque()
+        self.queue = AdmissionQueue(admission)
         self.results: List[GenerationResult] = []
         self._next_id = 0
+        self._submitted = 0
+        self._deadlines_live = False
+        # injectable clock (deadlines, TTFT): tests/replays substitute a
+        # virtual clock via set_clock for deterministic deadline behaviour
+        self._clock: Callable[[], float] = clock or time.monotonic
+        # watchdog bookkeeping: per-slot (token_count, dispatch_index)
+        # snapshots to detect slots that stay active without progressing
+        self._dispatches = 0
+        self._slot_progress: List[Tuple[int, int]] = [(0, 0)] * batch
 
         # device-resident slot state
         self.state = self._init_state()
@@ -206,6 +253,13 @@ class ServeEngine:
             self._encode_slot_fn = self._jit(model.encode_slot, cache_sh)
         self._clear_slot_fn = self._jit(model.clear_slot, cache_sh)
         self._admit_fn = self._jit(self._admit_update, (repl, state_sh))
+        # cancel / fault-arm share _admit_update's shape: one jitted
+        # slot-state write each, compiled at most once, dispatched only
+        # when a cancel/deadline/fault actually happens
+        self._cancel_fn = self._jit(self._cancel_update, state_sh)
+        self._fault_arm_fn = self._jit(self._fault_arm_update, state_sh)
+        self._fault_cache_fns: Dict[tuple, jax.stages.Wrapped] = {}
+        self._cache_sh = cache_sh
 
     def _jit(self, fn, out_shardings=None):
         """jax.jit, pinning outputs to their serving shardings when the
@@ -241,16 +295,21 @@ class ServeEngine:
     # -- device state --------------------------------------------------- #
     def _init_state(self) -> Dict[str, jax.Array]:
         b = self.batch
+        # fault_pos/fault_kind arm the in-loop logits fault injector:
+        # data-driven (a state write, never a recompile), disarmed at -1/0
         return {"pos": jnp.zeros((b,), jnp.int32),
                 "remaining": jnp.zeros((b,), jnp.int32),
                 "last_token": jnp.zeros((b,), jnp.int32),
                 "active": jnp.zeros((b,), bool),
-                "seed": jnp.zeros((b,), jnp.int32)}
+                "seed": jnp.zeros((b,), jnp.int32),
+                "fault_pos": jnp.full((b,), -1, jnp.int32),
+                "fault_kind": jnp.zeros((b,), jnp.int32)}
 
     def reset(self) -> None:
         """Clear all serving state (cache, slots, queue, results) while
         keeping compiled executables — benchmark legs reuse one engine so
-        recompilation never pollutes a timed region."""
+        recompilation never pollutes a timed region.  The admission
+        config survives; use :meth:`set_admission` to swap policies."""
         self.cache = self.model.init_cache(self.batch, self.max_seq,
                                            enc_len=self.enc_len)
         self.state = self._init_state()
@@ -259,14 +318,45 @@ class ServeEngine:
             self.state = jax.device_put(self.state, self._sh["state"])
         self.slot_req = [None] * self.batch
         self.out_tokens = [[] for _ in range(self.batch)]
-        self.queue = collections.deque()
+        self.queue = AdmissionQueue(self.queue.cfg)
         self.results = []
         self._next_id = 0
+        self._submitted = 0
+        self._deadlines_live = False
+        self._dispatches = 0
+        self._slot_progress = [(0, 0)] * self.batch
+
+    # -- clock / policy injection ---------------------------------------- #
+    def _now(self) -> float:
+        return self._clock()
+
+    def set_clock(self, clock: Callable[[], float]) -> None:
+        """Swap the engine clock (deadlines, TTFT stamps).  Virtual
+        clocks make deadline tests and trace replays deterministic."""
+        self._clock = clock
+
+    def set_admission(self, cfg: Optional[AdmissionConfig]) -> None:
+        """Swap the admission policy.  Pending queued requests are
+        re-offered under the new policy (overflow is shed per that
+        policy) — device state and compiled executables are untouched,
+        so scenario sweeps across policies cost zero recompiles."""
+        pending = self.queue.drain()
+        self.queue = AdmissionQueue(cfg)
+        for req in pending:
+            try:
+                _, shed = self.queue.offer(req)
+            except QueueFull:          # block policy: nobody to retry a
+                shed = [req]           # config swap, so overflow sheds
+            for s in shed:
+                self._finish_unadmitted(s, "shed")
+        if cfg is not None and cfg.deadline_ms is not None:
+            self._deadlines_live = True
 
     # -- request management -------------------------------------------- #
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
-               frames=None, patches=None) -> int:
-        """Enqueue a request.
+               frames=None, patches=None,
+               deadline_ms: Optional[float] = None) -> int:
+        """Enqueue a request through the admission policy.
 
         ``frames`` ((s_src, d_model) float) — REQUIRED for enc-dec archs:
         the source-side frontend embeddings, padded on-device to the
@@ -275,11 +365,32 @@ class ServeEngine:
         decoder trunk (early fusion) and streamed through the chunked
         prefill as precomputed embeddings.
 
+        ``deadline_ms`` — relative deadline on the engine clock
+        (defaults to the admission config's ``deadline_ms``, if any).
+        Expired queued requests finish as ``deadline_exceeded`` without
+        ever spending prefill; expired in-flight requests are cancelled
+        through the jitted cancel state-write with partial tokens.
+
+        Under a bounded queue the admission policy decides overload:
+        ``reject`` finishes the NEW request immediately as ``shed``,
+        ``shed_oldest`` sheds the oldest queued request instead, and
+        ``block`` raises :class:`QueueFull` (no id is consumed) —
+        backpressure belongs to the caller.  Every submitted request is
+        accounted: it ends in exactly one :data:`STATUSES` result.
+
         Prompts must leave room for at least one generated token: a
         trunk of ``max_seq`` or longer used to be admitted anyway,
         setting ``pos`` past the cache so the first decode step attended
-        over a silently clipped prefill."""
+        over a silently clipped prefill.  ``max_new_tokens`` must be
+        >= 1: admission ALWAYS samples one token from the prefill
+        logits, so 0 used to emit a token anyway and write
+        ``remaining = -1`` into the slot state."""
         cfg = self.model.cfg
+        if max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1 (got {max_new_tokens}): "
+                f"admission samples the first token from the prefill "
+                f"logits, so a 0-token generation does not exist")
         if cfg.is_encoder_decoder:
             if frames is None:
                 raise ValueError(
@@ -301,16 +412,28 @@ class ServeEngine:
                 raise ValueError(f"{cfg.name} has no vision frontend: "
                                  f"patches= is not accepted")
             patches = np.asarray(patches)
+        now = self._now()
+        if deadline_ms is None:
+            deadline_ms = self.queue.cfg.deadline_ms
+        deadline_s = None if deadline_ms is None else now + deadline_ms / 1e3
         req = _Request(self._next_id, list(prompt), max_new_tokens,
-                       frames=frames, patches=patches)
+                       frames=frames, patches=patches, submit_t=now,
+                       deadline_s=deadline_s)
         if req.trunk_len >= self.max_seq:
             raise ValueError(
                 f"trunk length {req.trunk_len} (prompt + patch prefix) "
                 f">= max_seq {self.max_seq}: the cache holds max_seq-1 "
                 f"prompt tokens plus the decode stream; truncate the "
                 f"prompt or raise max_seq")
+        # offer BEFORE consuming the id: block-policy QueueFull must
+        # leave the engine exactly as it was
+        accepted, shed = self.queue.offer(req)
         self._next_id += 1
-        self.queue.append(req)
+        self._submitted += 1
+        if deadline_s is not None:
+            self._deadlines_live = True
+        for s in shed:
+            self._finish_unadmitted(s, "shed")
         return req.request_id
 
     def _admit_update(self, state, logits, slot, plen, max_new, rid, key):
@@ -326,7 +449,32 @@ class ServeEngine:
             "last_token": state["last_token"].at[slot].set(tok),
             "active": state["active"].at[slot].set(active),
             "seed": state["seed"].at[slot].set(rid),
+            "fault_pos": state["fault_pos"].at[slot].set(-1),
+            "fault_kind": state["fault_kind"].at[slot].set(0),
         }
+
+    def _cancel_update(self, state, slot):
+        """Jitted cancel state-write (same shape discipline as
+        ``_admit_update``: one dispatch, compiled once): deactivate the
+        slot so the next fused block neither samples nor writes for it,
+        and disarm any pending fault."""
+        return dict(
+            state,
+            remaining=state["remaining"].at[slot].set(0),
+            active=state["active"].at[slot].set(False),
+            fault_pos=state["fault_pos"].at[slot].set(-1),
+            fault_kind=state["fault_kind"].at[slot].set(0),
+        )
+
+    def _fault_arm_update(self, state, slot, pos, kind):
+        """Jitted fault-arming state-write: the fused loop corrupts the
+        slot's logits when its sampling position reaches ``pos``.  Pure
+        data — arming/varying the fault never recompiles the loop."""
+        return dict(
+            state,
+            fault_pos=state["fault_pos"].at[slot].set(pos),
+            fault_kind=state["fault_kind"].at[slot].set(kind),
+        )
 
     def _prefill_into_slot(self, slot: int, req: _Request) -> jax.Array:
         """Build the slot's cache region through the slot-state protocol;
@@ -376,7 +524,13 @@ class ServeEngine:
         for slot in range(self.batch):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
-            req = self.queue.popleft()
+            req, expired = self.queue.take(self._now())
+            for e in expired:
+                # deadline passed while queued: account it WITHOUT
+                # spending a single prefill dispatch on it
+                self._finish_unadmitted(e, "deadline_exceeded")
+            if req is None:
+                continue
             logits = self._prefill_into_slot(slot, req)
             tok, self.state = self._admit_fn(
                 self.state, logits, jnp.int32(slot),
@@ -384,6 +538,8 @@ class ServeEngine:
                 jnp.int32(req.request_id), self._sample_key)
             self.slot_req[slot] = req
             self.out_tokens[slot] = [int(self._host_read(tok))]
+            req.first_token_t = self._now()
+            self._slot_progress[slot] = (1, self._dispatches)
             if req.max_new_tokens <= 1:
                 self._finish(slot)
 
@@ -391,7 +547,24 @@ class ServeEngine:
     def _make_decode_loop(self, k: int):
         """Jit the K-step fused loop: decode → sample → cache-write →
         bookkeeping inside one ``lax.scan``, emitting (tokens (k, b),
-        emitted-mask (k, b)) plus the advanced cache/state."""
+        emitted-codes (k, b) int32 — EMIT_NONE/TOKEN/FAULT) plus the
+        advanced cache/state.
+
+        Two robustness legs ride inside the body at zero marginal sync:
+
+        * **Fault injection** — if the slot's armed ``fault_pos`` equals
+          this step's sampling position, its logits row is overwritten
+          with NaN/Inf (``fault_kind``).  Purely data-driven: arming a
+          fault is a state write, never a recompile.
+        * **Sentinel** — a per-slot non-finite reduce over the logits
+          (catches injected faults AND real numeric escapes, e.g. a
+          poisoned quantized cache decoding to inf).  A tripped slot
+          emits EMIT_FAULT, keeps its pos/remaining/last_token frozen,
+          and drops out of ``active`` inside the same body — so its
+          cache writes stop mid-block and every surviving slot's stream
+          is bit-identical to an uninjected run (rows are independent).
+          The host sees the code in the SAME emitted array it already
+          syncs once per block: detection costs no extra transfer."""
         model = self.model
         temp, top_k, max_seq = self.temperature, self.top_k, self.max_seq
         # mesh-native: decode leaves logits vocab-sharded over 'model'
@@ -407,18 +580,31 @@ class ServeEngine:
                     params, cache, st["last_token"], st["pos"],
                     active=active)
                 nxt = st["pos"] + 1
+                hit = (active & (st["fault_kind"] > jnp.int32(0))
+                       & (st["fault_pos"] == nxt))
+                bad_val = jnp.where(
+                    st["fault_kind"] == jnp.int32(fault_lib.FAULT_INF),
+                    jnp.inf, jnp.nan).astype(logits.dtype)
+                logits = jnp.where(hit[:, None], bad_val[:, None], logits)
+                bad = active & jnp.any(~jnp.isfinite(logits), axis=-1)
+                ok = active & ~bad
                 tok = sample_tokens(logits, key, temp, top_k,
                                     slot_seed=st["seed"], pos=nxt,
                                     logits_sharding=logits_sh)
-                tok = jnp.where(active, tok, st["last_token"])
-                new_pos = jnp.where(active, nxt, st["pos"])
-                new_rem = st["remaining"] - active.astype(jnp.int32)
-                finished = active & ((new_rem <= 0)
-                                     | (new_pos >= max_seq - 1))
+                tok = jnp.where(ok, tok, st["last_token"])
+                new_pos = jnp.where(ok, nxt, st["pos"])
+                new_rem = st["remaining"] - ok.astype(jnp.int32)
+                finished = ok & ((new_rem <= 0)
+                                 | (new_pos >= max_seq - 1))
                 st = {"pos": new_pos, "remaining": new_rem,
-                      "last_token": tok, "active": active & ~finished,
-                      "seed": st["seed"]}
-                return (cache, st), (tok, active)
+                      "last_token": tok, "active": ok & ~finished,
+                      "seed": st["seed"],
+                      "fault_pos": st["fault_pos"],
+                      "fault_kind": jnp.where(bad, jnp.int32(0),
+                                              st["fault_kind"])}
+                emit = (ok.astype(jnp.int32)
+                        + jnp.int32(EMIT_FAULT) * bad.astype(jnp.int32))
+                return (cache, st), (tok, emit)
 
             (cache, state), (toks, emitted) = jax.lax.scan(
                 body, (cache, state), xs=None, length=k)
@@ -447,16 +633,30 @@ class ServeEngine:
                           req.max_new_tokens - len(self.out_tokens[slot]))
         return max(rem, 1)
 
-    def _finish(self, slot: int, truncated: bool = False) -> None:
+    def _finish(self, slot: int, status: str = "ok") -> None:
         req = self.slot_req[slot]
         self.results.append(GenerationResult(
             req.request_id, req.prompt, self.out_tokens[slot],
-            truncated=truncated))
+            status=status, submit_t=req.submit_t,
+            first_token_t=req.first_token_t, finish_t=self._now()))
         self.slot_req[slot] = None
+
+    def _finish_unadmitted(self, req: _Request, status: str) -> None:
+        """Account a request that never reached a slot (shed by the
+        admission policy, cancelled while queued, or deadline-expired
+        before prefill): zero tokens, terminal status."""
+        self.results.append(GenerationResult(
+            req.request_id, req.prompt, [], status=status,
+            submit_t=req.submit_t, finish_t=self._now()))
 
     def _dispatch(self, k: int) -> None:
         """One fused dispatch of K decode steps + one host sync for its
-        K×batch tokens."""
+        K×batch tokens.  Fault recovery happens here, at the block
+        boundary: a slot whose emitted codes contain EMIT_FAULT keeps
+        the tokens it emitted before the sentinel tripped, finishes as
+        ``status="faulted"``, and its pool region is re-initialized
+        through the existing ``clear_slot`` eviction path — the next
+        admission reuses the slot as if the fault never happened."""
         fn = self._loops.get(k)
         if fn is None:
             fn = self._loops[k] = self._make_decode_loop(k)
@@ -465,14 +665,171 @@ class ServeEngine:
         toks = self._host_read(toks)                  # (k, b) — ONE sync
         emitted = self._host_read(emitted)
         active_after = self._host_read(self.state["active"])
+        self._dispatches += 1
         for slot in range(self.batch):
             if self.slot_req[slot] is None:
                 continue
+            codes = emitted[:, slot]
             self.out_tokens[slot].extend(
-                int(t) for t, e in zip(toks[:, slot], emitted[:, slot])
-                if e)
-            if not active_after[slot]:
+                int(t) for t, e in zip(toks[:, slot], codes)
+                if e == EMIT_TOKEN)
+            if (codes == EMIT_FAULT).any():
+                self._finish(slot, status="faulted")
+                self.cache = self._clear_slot_fn(self.cache,
+                                                 jnp.int32(slot))
+            elif not active_after[slot]:
                 self._finish(slot)
+            else:
+                self._slot_progress[slot] = (len(self.out_tokens[slot]),
+                                             self._dispatches)
+        if self._deadlines_live:
+            self._expire_inflight()
+
+    def _expire_inflight(self) -> None:
+        """Cancel in-flight requests whose deadline passed: one jitted
+        cancel state-write each, partial tokens delivered as
+        ``deadline_exceeded``."""
+        now = self._now()
+        for slot, req in enumerate(self.slot_req):
+            if (req is not None and req.deadline_s is not None
+                    and now >= req.deadline_s):
+                self.state = self._cancel_fn(self.state, jnp.int32(slot))
+                self._finish(slot, status="deadline_exceeded")
+
+    # -- cancellation / fault injection ---------------------------------- #
+    def _slot_of(self, request_id: int) -> Tuple[int, _Request]:
+        for slot, req in enumerate(self.slot_req):
+            if req is not None and req.request_id == request_id:
+                return slot, req
+        raise KeyError(f"request {request_id} is not in flight")
+
+    def cancel(self, request_id: int, status: str = "shed") -> bool:
+        """Cancel a request wherever it lives.  Queued: removed without
+        ever touching the device.  In flight: one jitted cancel
+        state-write deactivates the slot (same compile-once shape as
+        admission) and the partial tokens are delivered under
+        ``status``.  Returns False when the id is unknown or already
+        finished."""
+        if status not in STATUSES:
+            raise ValueError(f"status {status!r} not in {STATUSES}")
+        req = self.queue.remove(request_id)
+        if req is not None:
+            self._finish_unadmitted(req, status)
+            return True
+        try:
+            slot, _ = self._slot_of(request_id)
+        except KeyError:
+            return False
+        self.state = self._cancel_fn(self.state, jnp.int32(slot))
+        self._finish(slot, status=status)
+        return True
+
+    def inject_fault(self, request_id: int, kind: str = "logits_nan",
+                     delay: int = 0, leaf: str = "k_s",
+                     xor: int = 0xFF) -> None:
+        """Arm a fault against an in-flight request (testing/chaos API;
+        see ``repro.serve.faults`` for the taxonomy and which kinds the
+        sentinel can detect).
+
+        Logits kinds (``logits_nan``/``logits_inf``) arm the in-loop
+        injector: the fault fires when the slot samples its
+        ``delay``-th next token (0 = the first token of the next
+        dispatch).  Cache kinds (``e8m0_overflow``/``kv_bitflip``/
+        ``state_inf``) poison the slot's cache region immediately via
+        one jitted pure cache-write; ``e8m0_overflow``/``state_inf``
+        decode to inf by construction so the sentinel sees them on the
+        next decode step, while ``kv_bitflip`` usually decodes to wrong
+        -but-finite values the sentinel cannot see (the documented
+        silent-corruption gap)."""
+        slot, req = self._slot_of(request_id)
+        if kind in fault_lib.LOGITS_FAULTS:
+            if delay < 0:
+                raise ValueError("delay must be >= 0")
+            pos = req.trunk_len + len(self.out_tokens[slot]) + delay
+            self.state = self._fault_arm_fn(
+                self.state, jnp.int32(slot), jnp.int32(pos),
+                jnp.int32(fault_lib.LOGITS_FAULTS[kind]))
+            return
+        if kind not in fault_lib.CACHE_POISONERS:
+            raise ValueError(
+                f"unknown fault kind {kind!r}; choose from "
+                f"{fault_lib.FAULT_KINDS}")
+        key = (kind, leaf, xor) if kind == "kv_bitflip" else (kind,)
+        fn = self._fault_cache_fns.get(key)
+        if fn is None:
+            if kind == "kv_bitflip":
+                base = functools.partial(fault_lib.flip_kv_bytes,
+                                         leaf=leaf, xor=xor)
+            else:
+                base = fault_lib.CACHE_POISONERS[kind]
+            fn = self._fault_cache_fns[key] = self._jit(
+                base, self._cache_sh)
+        self.cache = fn(self.cache, jnp.int32(slot))
+
+    # -- accounting / watchdog ------------------------------------------- #
+    def accounting(self) -> Dict[str, int]:
+        """Exact request accounting.  ``balanced`` asserts the shed
+        identity: every submitted request is either still pending
+        (queued/in-flight) or in exactly one terminal status —
+        submitted = ok + truncated + shed + deadline_exceeded + faulted
+        + in_flight + queued."""
+        by_status = {s: 0 for s in STATUSES}
+        for r in self.results:
+            by_status[r.status] += 1
+        in_flight = sum(r is not None for r in self.slot_req)
+        queued = len(self.queue)
+        done = sum(by_status.values())
+        return dict(by_status, submitted=self._submitted,
+                    completed=by_status["ok"] + by_status["truncated"],
+                    in_flight=in_flight, queued=queued,
+                    balanced=(self._submitted
+                              == done + in_flight + queued))
+
+    def watchdog_report(self) -> Dict:
+        """Host/device slot reconciliation (diagnostic path — a handful
+        of host reads, never called inside a timed region).  Flags:
+        device-active slots with no host-side tenant (orphans), host
+        tenants whose device slot went inactive without being finished,
+        negative ``remaining`` / out-of-range ``pos`` bookkeeping, a
+        device ``remaining`` that disagrees with the host token count,
+        and slots that stayed active across dispatches without emitting
+        (stuck — e.g. a scheduler bug starving the slot's writes)."""
+        active = self._host_read(self.state["active"])
+        pos = self._host_read(self.state["pos"])
+        remaining = self._host_read(self.state["remaining"])
+        findings: List[str] = []
+        for slot in range(self.batch):
+            req = self.slot_req[slot]
+            if req is None:
+                if active[slot]:
+                    findings.append(
+                        f"slot {slot}: device-active with no host "
+                        f"request (orphaned slot)")
+                continue
+            if not active[slot]:
+                findings.append(
+                    f"slot {slot}: host request {req.request_id} on an "
+                    f"inactive device slot (lost finish)")
+            if remaining[slot] < 0:
+                findings.append(
+                    f"slot {slot}: remaining={int(remaining[slot])} < 0")
+            if pos[slot] >= self.max_seq:
+                findings.append(
+                    f"slot {slot}: pos={int(pos[slot])} >= max_seq "
+                    f"{self.max_seq}")
+            host_rem = req.max_new_tokens - len(self.out_tokens[slot])
+            if active[slot] and int(remaining[slot]) != host_rem:
+                findings.append(
+                    f"slot {slot}: device remaining="
+                    f"{int(remaining[slot])} != host budget {host_rem}")
+            count, seen = self._slot_progress[slot]
+            if (active[slot] and self._dispatches - seen >= 3
+                    and len(self.out_tokens[slot]) == count):
+                findings.append(
+                    f"slot {slot}: stuck — no tokens emitted for "
+                    f"{self._dispatches - seen} dispatches")
+        return {"ok": not findings, "findings": findings,
+                "dispatches": self._dispatches}
 
     def decode_loop(self, k: Optional[int] = None) -> None:
         """Admit from the queue, then run K fused decode steps in one
@@ -491,14 +848,26 @@ class ServeEngine:
     def run(self, max_steps: int = 1000) -> List[GenerationResult]:
         """Serve until queue and pool drain or ``max_steps`` decode steps
         have been spent.  On budget exhaustion, in-flight requests are
-        FLUSHED as partial results (``truncated=True``) instead of being
-        silently dropped."""
+        FLUSHED as partial results (``status="truncated"``) instead of
+        being silently dropped.
+
+        A non-admittable queue state (non-empty queue, nothing active,
+        and an admission pass that neither admitted, expired, nor shed
+        anything) raises instead of spinning: the old bare ``continue``
+        could loop forever without spending a step."""
         steps = 0
         while steps < max_steps:
+            before = (len(self.queue), len(self.results))
             self._admit()
             if not self._any_active():
                 if not self.queue:
                     break
+                if (len(self.queue), len(self.results)) == before:
+                    raise RuntimeError(
+                        f"run() stalled: {len(self.queue)} queued "
+                        f"request(s), no active slots, and an admission "
+                        f"pass made no progress — scheduler/admission "
+                        f"bug (would previously spin silently)")
                 continue
             k = min(self.decode_block, max_steps - steps,
                     self._max_remaining())
@@ -509,7 +878,7 @@ class ServeEngine:
             # their device slots so a later run() cannot advance them
             for slot in range(self.batch):
                 if self.slot_req[slot] is not None:
-                    self._finish(slot, truncated=True)
+                    self._finish(slot, status="truncated")
             self.state = dict(
                 self.state,
                 active=jnp.zeros_like(self.state["active"]))

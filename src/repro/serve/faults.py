@@ -1,0 +1,177 @@
+"""Fault injection for the serving stack, paired with the in-loop
+sentinel that detects the detectable class.
+
+The source paper's first discipline is to characterize failure modes
+before trusting any number (§IV.A/§IV.B); our failure modes are numeric:
+a NaN/Inf escaping a matmul, an e8m0 scale byte overflowing to the inf
+code, a flipped bit in a packed KV byte.  This module injects each class
+on demand so the recovery path is *testable*, and names exactly which
+classes the engine's device-side sentinel can and cannot see:
+
+=================  ==============================  =====================
+fault kind         mechanism                       detected by
+=================  ==============================  =====================
+``logits_nan``     NaN written over one slot's     sentinel (non-finite
+                   logits row at an armed           reduce in the scan
+                   position (data-driven, in the    body)
+                   compiled scan body — no
+                   recompile)
+``logits_inf``     same, with +inf                 sentinel
+``e8m0_overflow``  every e8m0 scale byte of the    sentinel — code 0xFF
+                   slot's ring KV set to the        decodes to 2^128 =
+                   overflow code 0xFF (what an      inf in fp32, so the
+                   inf/overflowed quantizer         next attention read
+                   input would store)               goes non-finite
+``kv_bitflip``     XOR over the slot's packed KV   usually NOT — an
+                   bytes: scale bytes (``k_s``,     XOR'd e8m0 code is a
+                   default) or code bytes           wrong-but-FINITE
+                   (``k_q``)                        scale (100^0xFF=155
+                                                    → 2^28), and code
+                                                    flips decode finite:
+                                                    SILENT corruption
+                                                    unless a downstream
+                                                    op happens to
+                                                    overflow
+``state_inf``      the slot's recurrent state      sentinel — inf state
+                   row (SSM conv/ssd) set to inf    propagates to the
+                                                    logits within a step
+=================  ==============================  =====================
+
+The sentinel is a per-slot non-finite reduce over the logits *inside*
+the fused scan body, carried out through the emitted-token mask — no
+extra host sync, no recompile (see ``ServeEngine._make_decode_loop``).
+A detected slot stops advancing within the same block, finishes as
+``status="faulted"`` at the block boundary, and is re-initialized
+through the existing ``clear_slot`` eviction path; every other in-flight
+slot's stream is bit-identical to an uninjected run (row-independent
+numerics — the isolation tests pin this per arch family).
+
+The honest gap: a ``kv_bitflip`` that decodes to a finite wrong value —
+which is the COMMON case for both scale and code bytes — passes the
+sentinel: silent data corruption, visible only as a diverged token
+stream.  That is a property of non-finite sentinels everywhere, not of
+this one; the test suite pins the miss (status stays ``ok`` while the
+tokens differ from the uninjected oracle) so the gap stays documented
+instead of assumed away.  The guaranteed-detectable cache faults are
+``e8m0_overflow`` and ``state_inf``, whose poison decodes to inf by
+construction.
+
+Cache poisoners here are pure jnp functions over the slot-state cache
+tree (slot traced), so the engine jits each exactly once.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# in-body fault codes carried in the engine's device slot state
+# (state["fault_kind"]); 0 = disarmed
+FAULT_NONE = 0
+FAULT_NAN = 1
+FAULT_INF = 2
+LOGITS_FAULTS = {"logits_nan": FAULT_NAN, "logits_inf": FAULT_INF}
+
+# e8m0 code 0xFF decodes to 2^(255-127) = 2^128 -> inf in fp32: the
+# stored image of an overflowed quantizer input (repro.lowbits clamps
+# encodes to 254, so 255 can only appear through corruption)
+E8M0_OVERFLOW_CODE = 255
+
+CACHE_FAULTS = ("e8m0_overflow", "kv_bitflip", "state_inf")
+FAULT_KINDS = tuple(LOGITS_FAULTS) + CACHE_FAULTS
+
+
+def _ring_parts(cache: dict) -> Iterator[Tuple[str, str, dict]]:
+    """Yield ``(entry, part, tree)`` for every ring part (has a
+    ``slot_pos`` leaf) of a slot-state cache, self-attn KV first."""
+    for pref in (lambda p: p == "kv", lambda p: p != "kv"):
+        for name, entry in cache.items():
+            if not isinstance(entry, dict):
+                continue
+            for part, tree in entry.items():
+                if (isinstance(tree, dict) and "slot_pos" in tree
+                        and pref(part)):
+                    yield name, part, tree
+
+
+def _recurrent_parts(cache: dict) -> Iterator[Tuple[str, str, dict]]:
+    for name, entry in cache.items():
+        if not isinstance(entry, dict):
+            continue
+        for part, tree in entry.items():
+            if isinstance(tree, dict) and "slot_pos" not in tree:
+                yield name, part, tree
+
+
+def _with_leaf(cache: dict, entry: str, part: str, leaf: str,
+               new_leaf: jax.Array) -> dict:
+    out = dict(cache)
+    out[entry] = dict(cache[entry])
+    out[entry][part] = dict(cache[entry][part], **{leaf: new_leaf})
+    return out
+
+
+def overflow_e8m0_scales(cache: dict, slot: jax.Array) -> dict:
+    """Overflow the slot's e8m0 K-scale bytes in the first quantized
+    ring part: every ``k_s`` byte becomes 0xFF (scale 2^128 = inf), the
+    exact storage an overflowed quantizer input would leave behind.
+    Runs jitted with ``slot`` traced."""
+    for name, part, tree in _ring_parts(cache):
+        if "k_s" in tree:
+            ks = tree["k_s"]
+            return _with_leaf(
+                cache, name, part, "k_s",
+                ks.at[:, slot].set(jnp.uint8(E8M0_OVERFLOW_CODE)))
+    raise ValueError(
+        "e8m0_overflow needs a quantized KV cache (no ring part with "
+        "k_s scale bytes found) — use kv_format=... or a logits fault")
+
+
+def flip_kv_bytes(cache: dict, slot: jax.Array, leaf: str = "k_s",
+                  xor: int = 0xFF) -> dict:
+    """XOR the slot's packed KV bytes in the first quantized ring part.
+
+    ``leaf="k_s"`` flips e8m0 scale bytes (complementing a code gives a
+    wrong-but-finite scale, e.g. 100^0xFF=155 → 2^28); ``leaf="k_q"``
+    flips packed value codes.  Both are typically SILENT corruption —
+    the sentinel only fires if the damage overflows downstream (see
+    module docstring).  Runs jitted with ``slot`` traced."""
+    for name, part, tree in _ring_parts(cache):
+        if leaf in tree:
+            buf = tree[leaf]
+            as_u8 = buf.dtype == jnp.uint8
+            bits = buf if as_u8 else jax.lax.bitcast_convert_type(
+                buf, jnp.uint8)
+            row = bits[:, slot] ^ jnp.uint8(xor)
+            bits = bits.at[:, slot].set(row)
+            new = bits if as_u8 else jax.lax.bitcast_convert_type(
+                bits, buf.dtype)
+            return _with_leaf(cache, name, part, leaf, new)
+    raise ValueError(
+        f"kv_bitflip needs a quantized ring KV part with a {leaf!r} "
+        f"leaf — use kv_format=... or a logits fault")
+
+
+def poison_recurrent_state(cache: dict, slot: jax.Array) -> dict:
+    """Set the slot's row of the first recurrent part (SSM conv/ssd
+    state) to +inf — the storage image of an overflowed state update.
+    Runs jitted with ``slot`` traced."""
+    for name, part, tree in _recurrent_parts(cache):
+        out = dict(cache)
+        out[name] = dict(cache[name])
+        out[name][part] = jax.tree.map(
+            lambda a: a.at[:, slot].set(
+                jnp.full_like(a[:, 0], jnp.inf)), tree)
+        return out
+    raise ValueError(
+        "state_inf needs a recurrent cache part (SSM/hybrid arch) — "
+        "use a KV or logits fault")
+
+
+CACHE_POISONERS = {
+    "e8m0_overflow": overflow_e8m0_scales,
+    "kv_bitflip": flip_kv_bytes,
+    "state_inf": poison_recurrent_state,
+}
