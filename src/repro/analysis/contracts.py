@@ -31,9 +31,11 @@ jaxpr.  So we check the jaxpr.
 :func:`check_entry_points` wires these to the serving hot paths named
 in the ROADMAP: ``lm_decode_step``, the fused ``decode_loop`` scan
 body (which now carries the fault injector + non-finite sentinel),
-``lm_prefill_chunk``, ``qmatmul_packed``, ``flash_decode_quant``, and
-the robustness state-writes (``cancel_update``/``fault_arm_update``)
-plus the cache poisoners from ``repro.serve.faults``.
+``lm_prefill_chunk``, the speculative leg (``lm_verify_chunk`` /
+``lm_commit_chunk`` and the fused ``spec_loop`` scan body),
+``qmatmul_packed``, ``flash_decode_quant``, and the robustness
+state-writes (``cancel_update``/``fault_arm_update``) plus the cache
+poisoners from ``repro.serve.faults``.
 """
 
 from __future__ import annotations
@@ -302,6 +304,41 @@ def check_entry_points(kv_format: str = "float4_e2m1fn",
     findings += contract_findings(
         loop, (eng.params, eng.cache, eng.state, eng._sample_key),
         "decode_loop[k=4]")
+
+    # Speculative decoding entry points: the verify executable reads the
+    # quantized cache (packed codes must reach their dequant expand
+    # un-widened), the commit executable re-enters the quantized
+    # cache-write path (CT303: leaves come back at storage width), and
+    # the fused speculative loop composes both with drafting + chunk
+    # sampling in one scan body.
+    from repro.serve.spec import SpecConfig
+
+    spec_eng = ServeEngine(model, params, batch=batch, max_seq=max_seq,
+                           decode_block=4,
+                           spec=SpecConfig(draft_tokens=3,
+                                           ngram_table=64))
+    s_width = 4
+    v_tokens = jnp.zeros((batch, s_width), jnp.int32)
+    v_pos = jnp.ones((batch, 1), jnp.int32) + jnp.arange(
+        s_width, dtype=jnp.int32)[None, :]
+    e_acc = jnp.ones((batch,), jnp.int32)
+    findings += contract_findings(
+        model.verify_chunk, (params, cache, v_tokens, v_pos),
+        "lm_verify_chunk")
+    _, v_info = jax.eval_shape(model.verify_chunk, params, cache,
+                               v_tokens, v_pos)
+    v_info = jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, l.dtype), v_info)
+    findings += contract_findings(
+        model.commit_chunk, (cache, v_info, v_pos, e_acc),
+        "lm_commit_chunk")
+    findings += cache_width_findings(
+        model.commit_chunk, (cache, v_info, v_pos, e_acc),
+        "lm_commit_chunk", cache_out_index=0)
+    findings += contract_findings(
+        spec_eng._make_spec_loop(2),
+        (spec_eng.params, spec_eng.cache, spec_eng.state,
+         spec_eng._sample_key), "spec_loop[n=2]")
 
     chunk = jnp.zeros((4,), jnp.int32)
     findings += contract_findings(

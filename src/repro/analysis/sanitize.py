@@ -141,9 +141,16 @@ def _used(fn) -> bool:
 
 def _engine_executables(eng) -> Dict[str, Any]:
     fns = {f"decode_loop[k={k}]": fn for k, fn in eng._loops.items()}
+    for n, fn in getattr(eng, "_spec_loops", {}).items():
+        fns[f"spec_loop[n={n}]"] = fn
     fns["prefill_chunk"] = eng._prefill_chunk_fn
     fns["admit"] = eng._admit_fn
     fns["clear_slot"] = eng._clear_slot_fn
+    # draft-model speculation executables (present iff a draft model is
+    # attached; the draft clear is dispatched at every admission)
+    if getattr(eng, "_draft_cache", None) is not None:
+        fns["draft_prefill"] = eng._draft_prefill_fn
+        fns["draft_clear"] = eng._draft_clear_fn
     # arch-conditional admission executables (enc-dec encode, VLM
     # embed-chunk) — present iff the engine serves that family
     if hasattr(eng, "_encode_slot_fn"):
@@ -166,7 +173,7 @@ def _engine_executables(eng) -> Dict[str, Any]:
 
 
 def _drive(eng, prompts, max_new: int, k: int, loops: int,
-           frames=None):
+           frames=None, flush_steps: int = 4):
     for i, p in enumerate(prompts):
         eng.submit(p, max_new_tokens=max_new,
                    frames=None if frames is None else frames[i])
@@ -177,7 +184,7 @@ def _drive(eng, prompts, max_new: int, k: int, loops: int,
             CompileCounter() as cc:
         for _ in range(loops):
             eng.decode_loop(k)
-    results = eng.run(max_steps=4)       # flush stragglers (not timed)
+    results = eng.run(max_steps=flush_steps)  # flush stragglers (untimed)
     return results, sc.count, cc.count
 
 
@@ -322,6 +329,73 @@ def sanitize_serving(kv_format: Optional[str] = None,
     else:
         report["mesh"] = "none"
     return report
+
+
+def sanitize_spec(kv_format: Optional[str] = None,
+                  arch: str = "gptneox-1b", draft_tokens: int = 3) -> Dict:
+    """Speculative serving scenario under the full sanitizer stack.
+
+    Same two-pass discipline as :func:`sanitize_serving`, but the engine
+    decodes through the speculative draft→verify→commit loop.  The
+    report proves (a) the speculative executables (spec loop, admit with
+    n-gram seeding) compile exactly once, (b) the fused speculative
+    dispatches perform zero implicit host transfers — drafting, chunk
+    sampling, acceptance, and commit are all device-resident — and
+    (c) the emitted streams are token-identical to a NON-speculative
+    engine run over the same requests (the differential conformance
+    claim, asserted inside the sanitizer scenario too)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve.engine import ServeEngine
+    from repro.serve.spec import SpecConfig
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    k, loops = 4, 2
+    prompts = [[1, 2, 3, 4, 1, 2, 3, 4], [5, 6, 7, 5, 6, 7]]
+    max_new = 1 + k * loops
+
+    eng = ServeEngine(model, params, batch=2, max_seq=64,
+                      kv_format=kv_format, decode_block=k,
+                      prefill_chunk=4,
+                      spec=SpecConfig(draft_tokens=draft_tokens,
+                                      ngram_table=128))
+    warm_results, _, warm_compiles = _drive(eng, prompts, max_new, k,
+                                            loops, flush_steps=64)
+    eng.reset()
+    results, loop_syncs, loop_compiles = _drive(eng, prompts, max_new,
+                                                k, loops, flush_steps=64)
+    cache_sizes = jit_cache_sizes(_engine_executables(eng))
+
+    ref = ServeEngine(model, params, batch=2, max_seq=64,
+                      kv_format=kv_format, decode_block=k,
+                      prefill_chunk=4)
+    ref_results, _, _ = _drive(ref, prompts, max_new, k, loops,
+                               flush_steps=64)
+    by_id = lambda rs: {r.request_id: r.tokens for r in rs}
+
+    return {
+        "arch": arch,
+        "kv_format": kv_format or "none",
+        "draft_tokens": draft_tokens,
+        "warm_compiles": warm_compiles,
+        "measured_compiles": loop_compiles,
+        "measured_loop_syncs": loop_syncs,
+        "compile_cache_sizes": cache_sizes,
+        "compiled_exactly_once": all(
+            v == 1 for v in cache_sizes.values()),
+        "zero_implicit_loop_transfers": loop_compiles == 0
+        and loop_syncs == 0,
+        "tokens_match_warmup": (
+            [r.tokens for r in results]
+            == [r.tokens for r in warm_results]),
+        "tokens_match_nonspec": by_id(results) == by_id(ref_results),
+        "spec_report": eng.spec_report(),
+    }
 
 
 def sanitize_robust(kv_format: Optional[str] = None,

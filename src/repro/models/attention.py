@@ -478,6 +478,73 @@ def cache_write_chunk(cache: dict, k: jax.Array, v: jax.Array,
             "slot_pos": sp}
 
 
+def cache_write_rows(cache: dict, k: jax.Array, v: jax.Array,
+                     positions: jax.Array,
+                     valid: Optional[jax.Array] = None,
+                     kv_format: Optional[str] = None) -> dict:
+    """Bulk-write (b, s, hkv, d) k/v at PER-ROW absolute ``positions``
+    (b, s) into the (ring) cache — the speculative-commit write.
+
+    This is :func:`cache_write_chunk` generalized to per-row positions:
+    under continuous batching each slot sits at a different absolute
+    position, so committing an accepted speculative prefix is a per-row
+    scatter at ``positions % capacity``.  ``valid`` (b, s) masks rejected
+    draft tails and inactive rows (masked entries keep their previous
+    contents and slot_pos).  Per row, positions must map to distinct
+    ring slots (s <= capacity).  Quantized caches encode on the way in.
+    """
+    sp_arr = cache["slot_pos"]
+    b, cap = sp_arr.shape
+    s = k.shape[1]
+    rows = jnp.arange(b)[:, None]                     # (b, 1)
+    slots = (positions % cap).astype(jnp.int32)       # (b, s)
+    sp = sp_arr.at[rows, slots].set(
+        mask_rows(valid, positions.astype(jnp.int32), sp_arr[rows, slots]))
+
+    def put(pool, new):
+        return pool.at[rows, slots].set(
+            mask_rows(valid, new, pool[rows, slots]))
+
+    if is_quantized_cache(cache):
+        assert kv_format is not None, "quantized cache needs its kv_format"
+        k_q, k_s = quantize_kv(k, kv_format)
+        v_q, v_s = quantize_kv(v, kv_format)
+        return {"k_q": put(cache["k_q"], k_q), "k_s": put(cache["k_s"], k_s),
+                "v_q": put(cache["v_q"], v_q), "v_s": put(cache["v_s"], v_s),
+                "slot_pos": sp}
+    return {"k": put(cache["k"], k.astype(cache["k"].dtype)),
+            "v": put(cache["v"], v.astype(cache["v"].dtype)),
+            "slot_pos": sp}
+
+
+def cache_rollback(cache: dict, positions: jax.Array,
+                   reject: jax.Array) -> dict:
+    """Invalidate rejected speculative writes: a pointer move, no payload
+    traffic.
+
+    positions: (b, s) absolute positions that were speculatively written;
+    reject: (b, s) bool — True where the write must be undone.  A slot is
+    cleared (slot_pos -> -1) only when it STILL holds the rejected
+    position (``slot_pos[row, p % cap] == p``) — a slot already
+    overwritten by a later accepted position, or never written (inactive
+    row), is left alone.  Payload leaves are untouched: a -1 slot_pos
+    makes the entry invisible to the position-computed mask in
+    :func:`cache_attention`, and the next write at that slot replaces the
+    bytes.  Accepts period-stacked caches too (slot_pos (n_p, b, cap))."""
+    sp = cache["slot_pos"]
+    slots = (positions % sp.shape[-1]).astype(jnp.int32)   # (b, s)
+    rows = jnp.arange(positions.shape[0])[:, None]         # (b, 1)
+    if sp.ndim == 2:
+        cur = sp[rows, slots]                              # (b, s)
+        hit = reject & (cur == positions)
+        sp = sp.at[rows, slots].set(jnp.where(hit, -1, cur))
+    else:
+        cur = sp[:, rows, slots]                           # (n_p, b, s)
+        hit = reject[None] & (cur == positions[None])
+        sp = sp.at[:, rows, slots].set(jnp.where(hit, -1, cur))
+    return dict(cache, slot_pos=sp)
+
+
 def cache_write_prefill(cache: dict, k: jax.Array, v: jax.Array,
                         kv_format: Optional[str] = None) -> dict:
     """Bulk-write a prefill's K/V (b, s, hkv, d) into the (ring) cache.

@@ -17,8 +17,9 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models.transformer import (
     VLM_PATCHES, clear_slot, init_cache, init_lm, kv_cache_stats,
-    lm_decode_step, lm_encode_slot, lm_features, lm_forward, lm_prefill,
-    lm_prefill_chunk, min_cache_capacity, supports_chunked_prefill,
+    lm_commit_chunk, lm_decode_step, lm_encode_slot, lm_features,
+    lm_forward, lm_prefill, lm_prefill_chunk, lm_rollback_chunk,
+    lm_verify_chunk, min_cache_capacity, supports_chunked_prefill,
     unembed_weight)
 
 
@@ -66,6 +67,26 @@ class Model:
 
     def clear_slot(self, cache: dict, slot: jax.Array) -> dict:
         return clear_slot(cache, slot)
+
+    # -- speculative decoding (verify / commit / rollback) ------------ #
+    def verify_chunk(self, params: dict, cache: dict, tokens: jax.Array,
+                     positions: jax.Array):
+        """Batched draft verification: decode-exact logits for s
+        tentative tokens per row, read-only on the cache (see
+        ``repro.models.transformer.lm_verify_chunk``)."""
+        return lm_verify_chunk(params, cache, tokens, positions, self.cfg)
+
+    def commit_chunk(self, cache: dict, info: dict, positions: jax.Array,
+                     e: jax.Array) -> dict:
+        """Write the accepted prefix (e tokens per row) of a verified
+        block through the quantized cache-write path."""
+        return lm_commit_chunk(cache, info, positions, e, self.cfg)
+
+    def rollback_chunk(self, cache: dict, positions: jax.Array,
+                       reject: jax.Array) -> dict:
+        """Pointer-invalidate speculative ring writes (draft-model cache
+        leg)."""
+        return lm_rollback_chunk(cache, positions, reject)
 
     @property
     def supports_chunked_prefill(self) -> bool:

@@ -49,9 +49,16 @@ WRITE_SITE_MASKED = ("kv",)
 # array each — see ``ServeEngine._init_state``).  Named here, at the
 # bottom of the model stack, so the mesh placement rules
 # (``repro.distributed.sharding.state_specs``) and the engine agree on
-# what the slot-state protocol owns.
+# what the slot-state protocol owns.  The ``spec_*`` leaves exist only
+# on speculative engines (``ServeEngine(spec=...)``): a per-slot token
+# history ring + n-gram hash table that drive self-speculative drafting
+# (``repro.serve.spec``), plus device-side acceptance accounting — the
+# history/table rows are 2-D (batch, width) but obey the same replicated
+# placement as the scalar bookkeeping.
 SLOT_STATE_FIELDS = ("pos", "remaining", "last_token", "active", "seed",
-                     "fault_pos", "fault_kind")
+                     "fault_pos", "fault_kind",
+                     "spec_hist", "spec_ngram", "spec_accept",
+                     "spec_blocks")
 
 # Parts written once at admission and only *read* during decode.
 READ_ONLY_IN_DECODE = ("cross_kv", "enc_out")

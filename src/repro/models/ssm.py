@@ -333,3 +333,106 @@ def ssm_decode(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig
     new_cache = {"conv_x": wx[:, 1:, :], "conv_b": wb_[:, 1:, :],
                  "conv_c": wc_[:, 1:, :], "state": state}
     return out, new_cache
+
+
+# --------------------------------------------------------------------- #
+# Speculative verify / commit (draft-token verification — decode-exact)
+# --------------------------------------------------------------------- #
+
+def _conv_windows(f: jax.Array, s: int, k: int) -> jax.Array:
+    """f (bt, k-1+s, c) -> per-position conv windows (bt, s, k, c):
+    window j is rows [j, j+k) of ``[carry | raw]`` — exactly the window
+    :func:`ssm_decode` sees at step j.  s and k are static."""
+    return jnp.stack([f[:, j:j + k] for j in range(s)], axis=1)
+
+
+def ssm_verify_chunk(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig
+                     ) -> Tuple[jax.Array, dict]:
+    """Verify ``s`` drafted tokens through the SSD block in one batched
+    pass, BIT-IDENTICAL to ``s`` successive :func:`ssm_decode` steps.
+
+    x: (bt, s, d_model).  The cache row is read, never written: position
+    j's output uses the state after j decode steps and the conv window
+    ending at j, reproduced here with the decode step's literal ops — a
+    sequential fp32 scan (not :func:`ssd_chunked`, whose chunk-boundary
+    float association differs) and per-position windowed convolutions
+    (not :func:`causal_conv1d`, whose zero left-pad differs from the
+    carried window).  Returns (out (bt, s, d_model), info) where
+    ``info`` carries everything :func:`ssm_commit_chunk` needs to
+    advance the cache by an accepted prefix: the discretized inputs and
+    the full ``[carry | raw]`` conv streams.
+    """
+    bt, s, _ = x.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    k = cfg.ssm_conv
+    z, xr, br, cr, dt_raw = _project(p, x)
+    fx = jnp.concatenate([cache["conv_x"], xr], axis=1)   # (bt, k-1+s, c)
+    fb = jnp.concatenate([cache["conv_b"], br], axis=1)
+    fc = jnp.concatenate([cache["conv_c"], cr], axis=1)
+    xh = jax.nn.silu(jnp.einsum("bskc,ck->bsc", _conv_windows(fx, s, k),
+                                p["conv_x_w"]) + p["conv_x_b"])
+    b_ = jax.nn.silu(jnp.einsum("bskc,ck->bsc", _conv_windows(fb, s, k),
+                                p["conv_b_w"]) + p["conv_b_b"])
+    c_ = jax.nn.silu(jnp.einsum("bskc,ck->bsc", _conv_windows(fc, s, k),
+                                p["conv_c_w"]) + p["conv_c_b"])
+    xh = xh.reshape(bt, s, h, pd)
+    dt, dt_a = _discretize(p, dt_raw)
+    xd = (xh * dt[..., None]).astype(jnp.float32)         # (bt,s,h,p)
+    dt_a = dt_a.astype(jnp.float32)
+
+    def step(state, inp):
+        xd_t, a_t, b_t, c_t = inp          # (bt,h,p),(bt,h),(bt,n),(bt,n)
+        state = (state * jnp.exp(a_t)[..., None, None]
+                 + xd_t[..., None] * b_t[:, None, None, :])
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y_t
+
+    _, ys = jax.lax.scan(
+        step, cache["state"],
+        (xd.transpose(1, 0, 2, 3), dt_a.transpose(1, 0, 2),
+         b_.astype(jnp.float32).transpose(1, 0, 2),
+         c_.astype(jnp.float32).transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3)                          # (bt,s,h,p)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(bt, s, h * pd).astype(x.dtype)
+    y = rms_norm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    info = {"xd": xd, "dt_a": dt_a, "b": b_,
+            "fx": fx, "fb": fb, "fc": fc}
+    return out, info
+
+
+def ssm_commit_chunk(cache: dict, info: dict, e: jax.Array,
+                     cfg: ArchConfig) -> dict:
+    """Advance an SSM cache row by the first ``e`` verified positions.
+
+    This is the rollback story for recurrent state: nothing speculative
+    was ever written during verify, so "rollback" is simply committing
+    only the accepted prefix — the state re-materializes from the last
+    accepted checkpoint via ``ssd_chunked(initial_state=...)`` with
+    rejected positions identity-masked (decay exp(0)=1, input 0), which
+    reproduces ``e`` decode-step updates bit-exactly at chunk=1 (the
+    inter-chunk scan performs the decode recurrence itself; the
+    intra-chunk quadratic form is a single exact product).  e: (b,)
+    int32 in [0, s]; e=0 rows advance by identity steps only.
+    """
+    bt, s = info["dt_a"].shape[:2]
+    k1 = cfg.ssm_conv - 1
+    ok = jnp.arange(s)[None, :] < e[:, None]              # (bt, s)
+    xd = jnp.where(ok[..., None, None], info["xd"], 0.0)
+    dt_a = jnp.where(ok[..., None], info["dt_a"], 0.0)
+    b_ = jnp.where(ok[..., None], info["b"].astype(jnp.float32), 0.0)
+    _, state = ssd_chunked(xd, dt_a, b_, jnp.zeros_like(b_), chunk=1,
+                           initial_state=cache["state"])
+    # conv carry: the k-1 raw rows ending at position e — in the
+    # [carry | raw] indexing that is rows [e, e + k1), a per-row traced
+    # start with a static size.
+    def carry(f, old):
+        sl = jax.vmap(
+            lambda fr, er: jax.lax.dynamic_slice_in_dim(fr, er, k1, axis=0)
+        )(f, e.astype(jnp.int32))
+        return sl.astype(old.dtype)
+    return {"conv_x": carry(info["fx"], cache["conv_x"]),
+            "conv_b": carry(info["fb"], cache["conv_b"]),
+            "conv_c": carry(info["fc"], cache["conv_c"]),
+            "state": state}

@@ -726,6 +726,186 @@ def lm_prefill_chunk(params: dict, cache: dict, tokens: jax.Array,
     return logits, out_cache
 
 
+def lm_verify_chunk(params: dict, cache: dict, tokens: jax.Array,
+                    positions: jax.Array, cfg: ArchConfig
+                    ) -> Tuple[jax.Array, dict]:
+    """Speculative verify: forward ``s`` tentative tokens per pool row in
+    ONE batched pass, producing logits BIT-IDENTICAL to ``s`` successive
+    :func:`lm_decode_step` calls — without writing the cache.
+
+    tokens: (b, s) int32 — row r is [last committed token, draft_1, ...,
+    draft_{s-1}]; positions: (b, s) int32 — the absolute position of each
+    incoming token (``pos[r] + j``; rows advance independently).  Returns
+    (logits (b, s, vocab) fp32, ``info``): logits row j is the
+    next-token distribution after consuming tokens[:, :j+1], and ``info``
+    is the period-stacked commit payload :func:`lm_commit_chunk` consumes
+    (attention: the chunk's post-rope raw K/V; SSM: discretized inputs +
+    conv streams).
+
+    Exactness per mixer (the differential conformance suite pins this):
+
+      * attention queries attend the CONCAT of the pre-block cache view
+        and the chunk's own roundtripped K/V (quantize->dequantize under
+        the position's kv format — exactly the values decode reads back
+        after its quantize-on-write; dense caches cast to the storage
+        dtype).  The visible set matches decode at every step: a ring
+        overwrite during the block evicts an entry exactly when it
+        leaves the window (capacity == window), and the window mask
+        hides that entry from precisely the queries whose step would
+        have run post-overwrite.
+      * SSM runs the decode recurrence sequentially
+        (:func:`repro.models.ssm.ssm_verify_chunk`), read-only.
+      * cross-attention / enc_out are read-only in decode already.
+
+    Inactive rows produce garbage logits (their tokens are held
+    constant); the engine masks them at acceptance time, exactly like
+    the non-speculative loop masks its samples.
+    """
+    from repro.models.layers import apply_rope
+    pattern = cfg.block_pattern()
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens)                # (b, s, d)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    enc_out = cache.get("enc_out")
+
+    def period_fn(x, scanned):
+        period_params, period_cache = scanned
+        info = {}
+        for i, blk in enumerate(pattern):
+            p = period_params[f"pos{i}"]
+            c = period_cache[f"pos{i}"]
+            kv_fmt = cfg.kv_format_for(i)
+            leg: dict = {}
+            if blk.mixer == "attn":
+                h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
+                q = attn.project_q(p["attn"], h)
+                k, v = attn.project_kv(p["attn"], h)
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_theta)
+                kc, vc = attn.cache_kv(c["kv"], kv_fmt, cfg.head_dim,
+                                       out_dtype=x.dtype)
+                if attn.is_quantized_cache(c["kv"]):
+                    # the chunk's own entries must be what decode READS
+                    # after its quantize-on-write, not the raw values
+                    kd = attn.dequantize_kv(*attn.quantize_kv(k, kv_fmt),
+                                            kv_fmt, cfg.head_dim,
+                                            out_dtype=x.dtype)
+                    vd = attn.dequantize_kv(*attn.quantize_kv(v, kv_fmt),
+                                            kv_fmt, cfg.head_dim,
+                                            out_dtype=x.dtype)
+                else:
+                    kd, vd = k.astype(kc.dtype), v.astype(vc.dtype)
+                o = attn.cache_attention(
+                    q,
+                    jnp.concatenate([kc, kd], axis=1),
+                    jnp.concatenate([vc, vd], axis=1),
+                    jnp.concatenate([c["kv"]["slot_pos"],
+                                     positions.astype(jnp.int32)], axis=1),
+                    positions, window=blk.window,
+                    softcap=cfg.attn_logit_softcap)
+                x = x + attn.project_out(p["attn"], o)
+                leg["kv"] = {"k": k, "v": v}
+                if blk.cross_attn and "cross_kv" in c:
+                    h = rms_norm(p["ln_cross"], x, cfg.norm_eps)
+                    q = attn.project_q(p["cross"], h)
+                    ck, cv = attn.cache_kv(c["cross_kv"], kv_fmt,
+                                           cfg.head_dim, out_dtype=x.dtype)
+                    o = attn.cache_attention(
+                        q, ck, cv, c["cross_kv"]["slot_pos"],
+                        jnp.full_like(positions, jnp.int32(2 ** 30)))
+                    x = x + attn.project_out(p["cross"], o)
+            elif blk.mixer == "ssm":
+                h = rms_norm(p["ln_mix"], x, cfg.norm_eps)
+                out, leg["ssm"] = ssm_lib.ssm_verify_chunk(p["ssm"], h,
+                                                           c["ssm"], cfg)
+                x = x + out
+            if blk.ffn == "dense":
+                h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+                x = x + apply_mlp(p["mlp"], h, cfg.mlp_variant)
+            elif blk.ffn == "moe":
+                h = rms_norm(p["ln_ffn"], x, cfg.norm_eps)
+                y, _ = moe_lib.apply_moe(p["moe"], h, cfg)
+                x = x + y
+            info[f"pos{i}"] = leg
+        return x, info
+
+    layer_cache = {k: v for k, v in cache.items() if k.startswith("pos")}
+    x, info = jax.lax.scan(period_fn, x, (params["layers"], layer_cache))
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    w_out = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(w_out, x, softcap=cfg.final_logit_softcap)
+    return logits, info
+
+
+def lm_commit_chunk(cache: dict, info: dict, positions: jax.Array,
+                    e: jax.Array, cfg: ArchConfig) -> dict:
+    """Commit the first ``e`` verified positions per row into the serving
+    cache — the write half :func:`lm_verify_chunk` deferred.
+
+    positions: (b, s) as passed to verify; e: (b,) int32 accepted counts
+    in [0, s] (0 for inactive/rejected-at-once rows — every write is a
+    no-op there, which is what lets one executable serve all rows
+    uniformly).  Attention commits through the SAME quantize-on-write
+    path as decode (:func:`repro.models.attention.cache_write_rows`);
+    SSM re-materializes state from the pre-block checkpoint with the
+    rejected tail identity-masked
+    (:func:`repro.models.ssm.ssm_commit_chunk`); cross-KV / enc_out are
+    read-only.  Needs no parameters: verify's ``info`` already carries
+    the post-rope K/V and discretized SSM inputs.
+    """
+    pattern = cfg.block_pattern()
+    b, s = positions.shape
+    valid = jnp.arange(s)[None, :] < e[:, None]          # (b, s)
+
+    def period_fn(carry, scanned):
+        period_cache, period_info = scanned
+        new_cache = {}
+        for i, blk in enumerate(pattern):
+            c = period_cache[f"pos{i}"]
+            leg = period_info[f"pos{i}"]
+            entry = dict(c)
+            if blk.mixer == "attn":
+                entry["kv"] = attn.cache_write_rows(
+                    c["kv"], leg["kv"]["k"], leg["kv"]["v"], positions,
+                    valid, kv_format=cfg.kv_format_for(i))
+            elif blk.mixer == "ssm":
+                new_ssm = ssm_lib.ssm_commit_chunk(c["ssm"], leg["ssm"],
+                                                   e, cfg)
+                entry["ssm"] = slotstate.masked_tree(e > 0, new_ssm,
+                                                     c["ssm"])
+            new_cache[f"pos{i}"] = entry
+        return carry, new_cache
+
+    layer_cache = {k: v for k, v in cache.items() if k.startswith("pos")}
+    _, new_layer_cache = jax.lax.scan(period_fn, 0.0, (layer_cache, info))
+    out_cache = dict(new_layer_cache)
+    if "enc_out" in cache:
+        out_cache["enc_out"] = cache["enc_out"]
+    return out_cache
+
+
+def lm_rollback_chunk(cache: dict, positions: jax.Array,
+                      reject: jax.Array) -> dict:
+    """Invalidate speculative ring-cache writes at ``positions`` (b, s)
+    where ``reject`` (b, s) — a slot_pos pointer move per self-attention
+    layer (:func:`repro.models.attention.cache_rollback`), applied
+    directly on the period-stacked leaves.  Cross-KV and recurrent parts
+    are untouched: cross-KV is never speculatively written, and SSM
+    state is committed-not-written (see :func:`lm_commit_chunk`).  Used
+    on the DRAFT model's cache, whose drafting decode steps write
+    eagerly and must un-write the rejected tail."""
+    out: dict = {}
+    for name, entry in cache.items():
+        if not (name.startswith("pos") and isinstance(entry, dict)):
+            out[name] = entry
+            continue
+        e = dict(entry)
+        if "kv" in e:
+            e["kv"] = attn.cache_rollback(e["kv"], positions, reject)
+        out[name] = e
+    return out
+
+
 def lm_encode_slot(params: dict, cache: dict, frames: jax.Array,
                    slot: jax.Array, src_len: jax.Array, cfg: ArchConfig
                    ) -> dict:

@@ -1,11 +1,14 @@
 """Serving stack: samplers, quantization, batched engine, admission
-control, fault injection, and the traffic scenario harness."""
+control, fault injection, speculative decoding, and the traffic
+scenario harness."""
 
 from repro.serve.sampler import (  # noqa: F401
     fold_slot_keys,
     sample_token,
     sample_tokens,
+    sample_tokens_chunk,
 )
+from repro.serve.spec import SpecConfig  # noqa: F401
 from repro.serve.quant import (  # noqa: F401
     LOW_PRECISION_FORMATS,
     dequantize_blockwise,

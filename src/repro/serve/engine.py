@@ -72,9 +72,11 @@ from jax.sharding import Mesh
 from repro.distributed import sharding as shard_rules
 from repro.models.model import Model, build_model
 from repro.serve import faults as fault_lib
+from repro.serve import spec as spec_lib
 from repro.serve.admission import AdmissionConfig, AdmissionQueue, QueueFull
 from repro.serve.quant import dequantize_tree, quantize_tree
-from repro.serve.sampler import sample_tokens
+from repro.serve.sampler import sample_tokens, sample_tokens_chunk
+from repro.serve.spec import SpecConfig
 
 # terminal request states; every submitted request ends in exactly one
 STATUSES = ("ok",                  # full generation delivered
@@ -143,7 +145,8 @@ class ServeEngine:
                  enc_len: Optional[int] = None,
                  mesh: Optional[Mesh] = None,
                  admission: Optional[AdmissionConfig] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 spec: Optional[SpecConfig] = None):
         if kv_format:
             # rebind the model onto a config whose cache layer quantizes:
             # every prefill/decode below then writes packed codes +
@@ -180,6 +183,46 @@ class ServeEngine:
         # base sampling key; per-token keys are FOLDED from (request id,
         # position) inside the jitted loop — never split on the host
         self._sample_key = jax.random.PRNGKey(seed)
+
+        # speculative decoding (repro.serve.spec): the fused loop swaps
+        # its 1-token decode body for a draft→verify→commit block.
+        # Emitted tokens are ALWAYS the true sampled tokens from the
+        # verify logits, so greedy AND sampled streams are token-
+        # identical to the non-speculative loop by construction.
+        self.spec = spec
+        self._spec_loops: Dict[int, jax.stages.Wrapped] = {}
+        self._spec_tokens = 0     # host totals for spec_report()
+        self._spec_blocks = 0
+        self._draft_params = None
+        self._draft_cache = None
+        if spec is not None and spec.draft_model is not None:
+            dm: Model = spec.draft_model
+            if mesh is not None:
+                raise NotImplementedError(
+                    "draft-model speculation is single-device; mesh "
+                    "serving supports n-gram drafting")
+            dcfg = dm.cfg
+            if (dcfg.is_encoder_decoder or dcfg.frontend == "vision"
+                    or any(blk.mixer != "attn" or blk.cross_attn
+                           for blk in dcfg.block_pattern())):
+                raise ValueError(
+                    f"draft model {dcfg.name} must be a plain decoder-"
+                    f"only attention LM (the draft leg reuses the ring "
+                    f"slot_pos rollback, which only attention caches "
+                    f"support)")
+            if model.cfg.is_encoder_decoder or model.cfg.frontend == "vision":
+                raise ValueError(
+                    f"draft-model speculation needs a plain decoder-only "
+                    f"target (got {model.cfg.name}); n-gram drafting "
+                    f"covers the other families")
+            if dcfg.vocab_size != model.cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {dcfg.vocab_size} != target vocab "
+                    f"{model.cfg.vocab_size}")
+            self._draft_params = spec.draft_params
+            self._draft_cache = dm.init_cache(batch, max_seq)
+            self.prefill_chunk = max(1, min(
+                self.prefill_chunk, dm.min_cache_capacity(max_seq)))
 
         self.cache = model.init_cache(batch, max_seq, enc_len=self.enc_len)
         # measured KV storage accounting (codes + scales, what a decode
@@ -252,6 +295,10 @@ class ServeEngine:
         if model.cfg.is_encoder_decoder:
             self._encode_slot_fn = self._jit(model.encode_slot, cache_sh)
         self._clear_slot_fn = self._jit(model.clear_slot, cache_sh)
+        if self._draft_cache is not None:
+            dm = self.spec.draft_model
+            self._draft_prefill_fn = self._jit(dm.prefill_chunk)
+            self._draft_clear_fn = self._jit(dm.clear_slot)
         self._admit_fn = self._jit(self._admit_update, (repl, state_sh))
         # cancel / fault-arm share _admit_update's shape: one jitted
         # slot-state write each, compiled at most once, dispatched only
@@ -297,13 +344,26 @@ class ServeEngine:
         b = self.batch
         # fault_pos/fault_kind arm the in-loop logits fault injector:
         # data-driven (a state write, never a recompile), disarmed at -1/0
-        return {"pos": jnp.zeros((b,), jnp.int32),
-                "remaining": jnp.zeros((b,), jnp.int32),
-                "last_token": jnp.zeros((b,), jnp.int32),
-                "active": jnp.zeros((b,), bool),
-                "seed": jnp.zeros((b,), jnp.int32),
-                "fault_pos": jnp.full((b,), -1, jnp.int32),
-                "fault_kind": jnp.zeros((b,), jnp.int32)}
+        state = {"pos": jnp.zeros((b,), jnp.int32),
+                 "remaining": jnp.zeros((b,), jnp.int32),
+                 "last_token": jnp.zeros((b,), jnp.int32),
+                 "active": jnp.zeros((b,), bool),
+                 "seed": jnp.zeros((b,), jnp.int32),
+                 "fault_pos": jnp.full((b,), -1, jnp.int32),
+                 "fault_kind": jnp.zeros((b,), jnp.int32)}
+        if self.spec is not None:
+            # per-slot speculation state: n-gram history + table (device-
+            # resident drafting, zero host traffic) and acceptance
+            # accounting (tokens committed / blocks run for the CURRENT
+            # tenant; engine totals live on the host).  Non-speculative
+            # engines keep the exact 7-field state above.
+            state["spec_hist"] = jnp.full(
+                (b, self.spec.ngram_context), -1, jnp.int32)
+            state["spec_ngram"] = jnp.full(
+                (b, self.spec.ngram_table), -1, jnp.int32)
+            state["spec_accept"] = jnp.zeros((b,), jnp.int32)
+            state["spec_blocks"] = jnp.zeros((b,), jnp.int32)
+        return state
 
     def reset(self) -> None:
         """Clear all serving state (cache, slots, queue, results) while
@@ -313,6 +373,11 @@ class ServeEngine:
         self.cache = self.model.init_cache(self.batch, self.max_seq,
                                            enc_len=self.enc_len)
         self.state = self._init_state()
+        self._spec_tokens = 0
+        self._spec_blocks = 0
+        if self._draft_cache is not None:
+            self._draft_cache = self.spec.draft_model.init_cache(
+                self.batch, self.max_seq)
         if self.mesh is not None:
             self.cache = jax.device_put(self.cache, self._sh["cache"])
             self.state = jax.device_put(self.state, self._sh["state"])
@@ -436,22 +501,41 @@ class ServeEngine:
             self._finish_unadmitted(s, "shed")
         return req.request_id
 
-    def _admit_update(self, state, logits, slot, plen, max_new, rid, key):
+    def _admit_update(self, state, logits, slot, plen, max_new, rid, key,
+                      tail=None):
         """Jitted per-admission state write: sample the first token from
         the prefill logits (same (rid, pos) key fold as the loop) and set
-        the slot's device state.  One dispatch per admission."""
+        the slot's device state.  One dispatch per admission.
+
+        Speculative engines pass ``tail`` — the last ``prompt_tail``
+        prompt tokens, left-padded with -1 — and the slot's n-gram
+        history/table is reseeded from it (plus the freshly sampled
+        first token) inside the same dispatch."""
         tok = sample_tokens(logits, key, self.temperature, self.top_k,
                             slot_seed=rid[None], pos=plen[None])[0]
         active = max_new > 1
-        return tok, {
-            "pos": state["pos"].at[slot].set(plen),
-            "remaining": state["remaining"].at[slot].set(max_new - 1),
-            "last_token": state["last_token"].at[slot].set(tok),
-            "active": state["active"].at[slot].set(active),
-            "seed": state["seed"].at[slot].set(rid),
-            "fault_pos": state["fault_pos"].at[slot].set(-1),
-            "fault_kind": state["fault_kind"].at[slot].set(0),
-        }
+        out = dict(
+            state,
+            pos=state["pos"].at[slot].set(plen),
+            remaining=state["remaining"].at[slot].set(max_new - 1),
+            last_token=state["last_token"].at[slot].set(tok),
+            active=state["active"].at[slot].set(active),
+            seed=state["seed"].at[slot].set(rid),
+            fault_pos=state["fault_pos"].at[slot].set(-1),
+            fault_kind=state["fault_kind"].at[slot].set(0),
+        )
+        if self.spec is not None:
+            hist, table = spec_lib.seed_from_tail(
+                tail, self.spec.ngram_context, self.spec.ngram_table)
+            # the first token is already committed — fold it in too
+            hist, table = spec_lib.ngram_update(
+                hist[None], table[None], tok[None, None],
+                jnp.ones((1, 1), bool))
+            out["spec_hist"] = state["spec_hist"].at[slot].set(hist[0])
+            out["spec_ngram"] = state["spec_ngram"].at[slot].set(table[0])
+            out["spec_accept"] = state["spec_accept"].at[slot].set(0)
+            out["spec_blocks"] = state["spec_blocks"].at[slot].set(0)
+        return tok, out
 
     def _cancel_update(self, state, slot):
         """Jitted cancel state-write (same shape discipline as
@@ -488,6 +572,9 @@ class ServeEngine:
         into the pool region (jitted; quantize-on-write for kv_format
         caches; SSM conv/state carried across chunk boundaries)."""
         self.cache = self._clear_slot_fn(self.cache, jnp.int32(slot))
+        if self._draft_cache is not None:
+            self._draft_cache = self._draft_clear_fn(self._draft_cache,
+                                                     jnp.int32(slot))
         cdtype = jnp.dtype(self.model.cfg.compute_dtype)
         chunk = self.prefill_chunk
         if req.frames is not None:
@@ -518,6 +605,14 @@ class ServeEngine:
                 self.params, self.cache,
                 jnp.asarray(part, jnp.int32), jnp.int32(slot),
                 jnp.int32(offset + off), jnp.int32(valid))
+            if self._draft_cache is not None:
+                # the draft model shares the slot protocol: its cache is
+                # prefilled through the same chunk stream (draft-model
+                # targets are plain decoder-only, so offset == 0)
+                _, self._draft_cache = self._draft_prefill_fn(
+                    self._draft_params, self._draft_cache,
+                    jnp.asarray(part, jnp.int32), jnp.int32(slot),
+                    jnp.int32(offset + off), jnp.int32(valid))
         return logits
 
     def _admit(self) -> None:
@@ -532,10 +627,18 @@ class ServeEngine:
             if req is None:
                 continue
             logits = self._prefill_into_slot(slot, req)
-            tok, self.state = self._admit_fn(
-                self.state, logits, jnp.int32(slot),
-                jnp.int32(req.trunk_len), jnp.int32(req.max_new_tokens),
-                jnp.int32(req.request_id), self._sample_key)
+            args = [self.state, logits, jnp.int32(slot),
+                    jnp.int32(req.trunk_len),
+                    jnp.int32(req.max_new_tokens),
+                    jnp.int32(req.request_id), self._sample_key]
+            if self.spec is not None:
+                ptail = self.spec.prompt_tail
+                tail = np.full((ptail,), -1, np.int32)
+                got = req.prompt[-ptail:]
+                if got:
+                    tail[-len(got):] = got
+                args.append(jnp.asarray(tail))
+            tok, self.state = self._admit_fn(*args)
             self.slot_req[slot] = req
             self.out_tokens[slot] = [int(self._host_read(tok))]
             req.first_token_t = self._now()
@@ -596,12 +699,10 @@ class ServeEngine:
                 new_rem = st["remaining"] - ok.astype(jnp.int32)
                 finished = ok & ((new_rem <= 0)
                                  | (new_pos >= max_seq - 1))
-                st = {"pos": new_pos, "remaining": new_rem,
-                      "last_token": tok, "active": ok & ~finished,
-                      "seed": st["seed"],
-                      "fault_pos": st["fault_pos"],
-                      "fault_kind": jnp.where(bad, jnp.int32(0),
-                                              st["fault_kind"])}
+                st = dict(st, pos=new_pos, remaining=new_rem,
+                          last_token=tok, active=ok & ~finished,
+                          fault_kind=jnp.where(bad, jnp.int32(0),
+                                               st["fault_kind"]))
                 emit = (ok.astype(jnp.int32)
                         + jnp.int32(EMIT_FAULT) * bad.astype(jnp.int32))
                 return (cache, st), (tok, emit)
@@ -609,6 +710,173 @@ class ServeEngine:
             (cache, state), (toks, emitted) = jax.lax.scan(
                 body, (cache, state), xs=None, length=k)
             return cache, state, toks, emitted
+
+        if self.mesh is None:
+            return jax.jit(loop)
+        return jax.jit(loop, out_shardings=(
+            self._sh["cache"], self._sh["state"],
+            self._sh["replicated"], self._sh["replicated"]))
+
+    # -- speculative decode --------------------------------------------- #
+    def _make_spec_loop(self, n_blocks: int):
+        """Jit the speculative fused loop: ``n_blocks`` draft→verify→
+        commit blocks in one dispatch, each covering s = draft_tokens+1
+        token positions.  Emits (tokens, emitted-codes) reshaped to
+        (n_blocks*s, b) so :meth:`_harvest` consumes them exactly like
+        the non-speculative loop's (k, b) outputs.
+
+        Output equivalence is by construction, not by luck: the verify
+        pass re-scores every drafted position with decode-bit-identical
+        logits (``lm_verify_chunk``), the TRUE tokens are sampled from
+        those logits with the same per-(request, position) key folds the
+        non-speculative loop uses, and drafts only decide how many of
+        those true tokens are valid this block: e = min(#leading draft
+        matches + 1, remaining, max_seq-1-pos).  Accepted prefixes
+        commit through the quantized cache-write path; rejected verify
+        rows are simply never written (the target cache needs no
+        rollback — only the eagerly-written draft-model cache does).
+
+        Fault semantics match the non-speculative loop at token
+        granularity: an armed fault poisons the verify logits row whose
+        sampling position equals ``fault_pos``; if that row lands inside
+        the accepted prefix, acceptance truncates there, EMIT_FAULT is
+        emitted after the survivors, and the slot drops out of
+        ``active`` (its partially-written block is discarded with the
+        slot at the block-boundary ``clear_slot``)."""
+        model, spec = self.model, self.spec
+        temp, top_k, max_seq = self.temperature, self.top_k, self.max_seq
+        D = spec.draft_tokens
+        s = D + 1
+        logits_sh = self._sh["logits"] if self.mesh is not None else None
+        use_draft_model = self._draft_cache is not None
+        dmodel = spec.draft_model
+
+        def block(params, cache, st, key, dparams, dcache):
+            active = st["active"]
+            P = st["pos"]
+            # 1. propose D drafts
+            if spec.draft_fn is not None:
+                drafts = spec.draft_fn(st)
+            elif use_draft_model:
+                def dstep(carry, _):
+                    dc, tok, dpos = carry
+                    dlogits, dc = dmodel.decode_step(
+                        dparams, dc, tok, dpos, active=active)
+                    ntok = jnp.argmax(dlogits, axis=-1).astype(jnp.int32)
+                    return (dc, ntok, dpos + 1), ntok
+                (dcache, _, _), drafts_t = jax.lax.scan(
+                    dstep, (dcache, st["last_token"], P), xs=None,
+                    length=D)
+                drafts = drafts_t.transpose(1, 0)
+            else:
+                drafts = spec_lib.ngram_draft(
+                    st["spec_hist"], st["spec_ngram"], D)
+            # 2. verify: decode-exact logits for all s rows at once
+            tokens = jnp.concatenate(
+                [st["last_token"][:, None], drafts], axis=1)
+            positions = (P[:, None]
+                         + jnp.arange(s, dtype=jnp.int32)[None, :])
+            logits, info = model.verify_chunk(
+                params, cache, tokens, positions)
+            # 3. armed logits fault: poison the row whose SAMPLING
+            # position matches fault_pos (same trigger rule as the
+            # non-speculative body, vectorized over the block)
+            q_pos = positions + 1
+            hit = (active[:, None]
+                   & (st["fault_kind"][:, None] > jnp.int32(0))
+                   & (st["fault_pos"][:, None] == q_pos))
+            bad_val = jnp.where(
+                st["fault_kind"] == jnp.int32(fault_lib.FAULT_INF),
+                jnp.inf, jnp.nan).astype(logits.dtype)
+            logits = jnp.where(hit[:, :, None], bad_val[:, None, None],
+                               logits)
+            # 4. sample the TRUE tokens (drafts never enter the stream)
+            toks = sample_tokens_chunk(logits, key, temp, top_k,
+                                       slot_seed=st["seed"], pos=q_pos,
+                                       logits_sharding=logits_sh)
+            # 5. acceptance: leading drafts that matched, plus the bonus
+            # token sampled past the last match
+            match = (drafts == toks[:, :D]).astype(jnp.int32)
+            m = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+            e0 = jnp.minimum(m + 1, st["remaining"])
+            e0 = jnp.minimum(e0, jnp.maximum(max_seq - 1 - P, 0))
+            e0 = jnp.where(active, e0, 0)
+            # sentinel: first non-finite verify row INSIDE the accepted
+            # prefix truncates acceptance there and trips the fault
+            bad_rows = (active[:, None]
+                        & jnp.any(~jnp.isfinite(logits), axis=-1))
+            first_bad = jnp.where(
+                jnp.any(bad_rows, axis=1),
+                jnp.argmax(bad_rows, axis=1).astype(jnp.int32),
+                jnp.int32(s))
+            fault = active & (first_bad < e0)
+            e = jnp.where(fault, first_bad, e0)
+            # 6. commit the accepted prefix (quantized cache-write path;
+            # e = 0 rows are uniform no-ops)
+            cache = model.commit_chunk(cache, info, positions, e)
+            if use_draft_model:
+                # the draft cache wrote eagerly during drafting: roll
+                # back the rejected tail by pointer invalidation
+                dpos = (P[:, None]
+                        + jnp.arange(D, dtype=jnp.int32)[None, :])
+                reject = (jnp.arange(D, dtype=jnp.int32)[None, :]
+                          >= e[:, None])
+                dcache = dmodel.rollback_chunk(dcache, dpos, reject)
+            # 7. slot bookkeeping (identical rules, advanced by e)
+            new_pos = P + e
+            new_rem = st["remaining"] - e
+            last = jnp.take_along_axis(
+                toks, jnp.maximum(e - 1, 0)[:, None], axis=1)[:, 0]
+            last = jnp.where(e > 0, last, st["last_token"])
+            finished = (active & ~fault
+                        & ((new_rem <= 0) | (new_pos >= max_seq - 1)))
+            cols = jnp.arange(s, dtype=jnp.int32)[None, :]
+            hist, table = spec_lib.ngram_update(
+                st["spec_hist"], st["spec_ngram"], toks,
+                cols < e[:, None])
+            st = dict(st, pos=new_pos, remaining=new_rem,
+                      last_token=last,
+                      active=active & ~fault & ~finished,
+                      fault_kind=jnp.where(fault, jnp.int32(0),
+                                           st["fault_kind"]),
+                      spec_hist=hist, spec_ngram=table,
+                      spec_accept=st["spec_accept"] + e,
+                      spec_blocks=(st["spec_blocks"]
+                                   + active.astype(jnp.int32)))
+            emit = jnp.where(cols < e[:, None], jnp.int32(EMIT_TOKEN),
+                             jnp.int32(EMIT_NONE))
+            emit = jnp.where(fault[:, None] & (cols == e[:, None]),
+                             jnp.int32(EMIT_FAULT), emit)
+            return cache, dcache, st, toks, emit
+
+        def reshape_out(ys):
+            # (n_blocks, b, s) -> (n_blocks * s, b): block-major rows,
+            # the exact layout _harvest's host loop already consumes
+            return ys.transpose(0, 2, 1).reshape(n_blocks * s, -1)
+
+        if use_draft_model:
+            def loop(params, cache, state, key, dparams, dcache):
+                def body(carry, _):
+                    cache, st, dc = carry
+                    cache, dc, st, toks, emit = block(
+                        params, cache, st, key, dparams, dc)
+                    return (cache, st, dc), (toks, emit)
+                (cache, state, dcache), (toks, emitted) = jax.lax.scan(
+                    body, (cache, state, dcache), xs=None,
+                    length=n_blocks)
+                return (cache, state, reshape_out(toks),
+                        reshape_out(emitted), dcache)
+            return jax.jit(loop)
+
+        def loop(params, cache, state, key):
+            def body(carry, _):
+                cache, st = carry
+                cache, _, st, toks, emit = block(
+                    params, cache, st, key, None, None)
+                return (cache, st), (toks, emit)
+            (cache, state), (toks, emitted) = jax.lax.scan(
+                body, (cache, state), xs=None, length=n_blocks)
+            return cache, state, reshape_out(toks), reshape_out(emitted)
 
         if self.mesh is None:
             return jax.jit(loop)
@@ -649,20 +917,59 @@ class ServeEngine:
             req.request_id, req.prompt, [], status=status,
             submit_t=req.submit_t, finish_t=self._now()))
 
-    def _dispatch(self, k: int) -> None:
+    def _dispatch(self, k: int) -> int:
         """One fused dispatch of K decode steps + one host sync for its
-        K×batch tokens.  Fault recovery happens here, at the block
-        boundary: a slot whose emitted codes contain EMIT_FAULT keeps
-        the tokens it emitted before the sentinel tripped, finishes as
-        ``status="faulted"``, and its pool region is re-initialized
-        through the existing ``clear_slot`` eviction path — the next
-        admission reuses the slot as if the fault never happened."""
+        K×batch tokens.  Fault recovery happens in :meth:`_harvest`, at
+        the block boundary: a slot whose emitted codes contain
+        EMIT_FAULT keeps the tokens it emitted before the sentinel
+        tripped, finishes as ``status="faulted"``, and its pool region
+        is re-initialized through the existing ``clear_slot`` eviction
+        path — the next admission reuses the slot as if the fault never
+        happened.  Returns the decode-step budget actually spent (k
+        here; the speculative leg rounds up to whole blocks)."""
+        if self.spec is not None:
+            return self._dispatch_spec(k)
         fn = self._loops.get(k)
         if fn is None:
             fn = self._loops[k] = self._make_decode_loop(k)
         self.cache, self.state, toks, emitted = fn(
             self.params, self.cache, self.state, self._sample_key)
-        toks = self._host_read(toks)                  # (k, b) — ONE sync
+        self._harvest(toks, emitted)
+        return k
+
+    def _dispatch_spec(self, k: int) -> int:
+        """Speculative dispatch covering >= k token positions:
+        ceil(k / (draft_tokens+1)) fused draft→verify→commit blocks in
+        one launch, then the same one-sync harvest."""
+        s = self.spec.draft_tokens + 1
+        n_blocks = max(1, -(-k // s))
+        fn = self._spec_loops.get(n_blocks)
+        if fn is None:
+            fn = self._spec_loops[n_blocks] = self._make_spec_loop(
+                n_blocks)
+        if self._draft_cache is not None:
+            (self.cache, self.state, toks, emitted,
+             self._draft_cache) = fn(
+                self.params, self.cache, self.state, self._sample_key,
+                self._draft_params, self._draft_cache)
+        else:
+            self.cache, self.state, toks, emitted = fn(
+                self.params, self.cache, self.state, self._sample_key)
+        codes = self._harvest(toks, emitted)
+        # engine-lifetime acceptance accounting, from the SAME synced
+        # array: a (block, slot) cell counts as a run block iff any code
+        # is non-NONE there (the slot was active entering the block)
+        per_block = codes.reshape(n_blocks, s, -1)
+        self._spec_tokens += int((codes == EMIT_TOKEN).sum())
+        self._spec_blocks += int(
+            (per_block != EMIT_NONE).any(axis=1).sum())
+        return n_blocks * s
+
+    def _harvest(self, toks, emitted) -> np.ndarray:
+        """Block-boundary host pass shared by both loop flavours: ONE
+        sync for the (rows, batch) token/code arrays, then per-slot
+        extend/finish/fault bookkeeping.  Returns the host codes."""
+        toks = self._host_read(toks)                  # (rows, b) — ONE sync
         emitted = self._host_read(emitted)
         active_after = self._host_read(self.state["active"])
         self._dispatches += 1
@@ -677,6 +984,9 @@ class ServeEngine:
                 self._finish(slot, status="faulted")
                 self.cache = self._clear_slot_fn(self.cache,
                                                  jnp.int32(slot))
+                if self._draft_cache is not None:
+                    self._draft_cache = self._draft_clear_fn(
+                        self._draft_cache, jnp.int32(slot))
             elif not active_after[slot]:
                 self._finish(slot)
             else:
@@ -684,6 +994,25 @@ class ServeEngine:
                                              self._dispatches)
         if self._deadlines_live:
             self._expire_inflight()
+        return emitted
+
+    def spec_report(self) -> Dict:
+        """Engine-lifetime speculation accounting (host totals; the
+        per-slot in-flight view lives in ``state['spec_accept']`` /
+        ``state['spec_blocks']``).  ``mean_accepted_len`` is tokens
+        committed per run block — the paper-style acceptance length
+        (1.0 = no draft ever accepted, draft_tokens+1 = every block
+        fully accepted)."""
+        blocks = self._spec_blocks
+        return {
+            "enabled": self.spec is not None,
+            "draft_tokens": (0 if self.spec is None
+                             else self.spec.draft_tokens),
+            "blocks": blocks,
+            "accepted_tokens": self._spec_tokens,
+            "mean_accepted_len": (self._spec_tokens / blocks
+                                  if blocks else 0.0),
+        }
 
     def _expire_inflight(self) -> None:
         """Cancel in-flight requests whose deadline passed: one jitted
@@ -871,8 +1200,7 @@ class ServeEngine:
                 continue
             k = min(self.decode_block, max_steps - steps,
                     self._max_remaining())
-            self._dispatch(k)
-            steps += k
+            steps += self._dispatch(k)
         if self._any_active():
             # budget hit mid-generation: flush partials and deactivate
             # their device slots so a later run() cannot advance them

@@ -46,6 +46,21 @@ through the existing ``clear_slot`` eviction path; every other in-flight
 slot's stream is bit-identical to an uninjected run (row-independent
 numerics — the isolation tests pin this per arch family).
 
+The same taxonomy arms the SPECULATIVE loop (``ServeEngine(spec=...)``)
+at token granularity: a logits fault poisons the verify-logits row
+whose sampling position equals the armed ``fault_pos``, and the
+sentinel reduce runs per verify row.  A poisoned row inside the
+accepted prefix truncates acceptance there — tokens before it commit,
+EMIT_FAULT follows them, and the slot recovers through the same
+block-boundary ``clear_slot`` path.  A poisoned row in the REJECTED
+tail (drafted-but-not-accepted positions) is discarded with the tail:
+the fault stays armed and fires when decoding actually reaches that
+position, exactly as the non-speculative loop would.  Cache poisons in
+a drafted-but-rejected ring region are likewise harmless by
+construction — rejected rows are never written to the target cache, so
+there is nothing poisoned to read back (the speculative bitflip test
+pins survivor isolation).
+
 The honest gap: a ``kv_bitflip`` that decodes to a finite wrong value —
 which is the COMMON case for both scale and code bytes — passes the
 sentinel: silent data corruption, visible only as a diverged token

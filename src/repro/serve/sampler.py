@@ -92,3 +92,40 @@ def sample_tokens(logits: jax.Array, key: Optional[jax.Array] = None,
     return jax.vmap(
         lambda k, l: jax.random.categorical(k, l))(keys, logits
                                                    ).astype(jnp.int32)
+
+
+def sample_tokens_chunk(logits: jax.Array, key: Optional[jax.Array] = None,
+                        temperature: float = 0.0, top_k: int = 0,
+                        slot_seed: Optional[jax.Array] = None,
+                        pos: Optional[jax.Array] = None,
+                        logits_sharding=None) -> jax.Array:
+    """Verify-time sampling: logits (b, s, v) -> tokens (b, s).
+
+    The speculative verify pass produces one logits row per drafted
+    position; every row samples under the SAME per-(request, position)
+    folded key :func:`sample_tokens` would have used for that position
+    (``slot_seed`` (b,), ``pos`` (b, s) — the position each sampled
+    token will occupy).  That identity is the whole correctness story:
+    the token at position p is a pure function of (engine seed, request,
+    p, logits), so a speculative engine emits the same stream as the
+    non-speculative loop whenever the verify logits match the per-step
+    logits — drafts only decide how many of these tokens are valid.
+    """
+    if logits_sharding is not None:
+        logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert key is not None, "sampling needs a PRNG key"
+    logits = logits / temperature
+    if top_k > 0:
+        logits = _top_k_filter(logits, top_k)
+    if slot_seed is None or pos is None:
+        return jax.random.categorical(key, logits).astype(jnp.int32)
+
+    def row(seed, row_pos, row_logits):                # (s,), (s, v)
+        keys = jax.vmap(lambda p: jax.random.fold_in(
+            jax.random.fold_in(key, seed), p))(row_pos.astype(jnp.int32))
+        return jax.vmap(jax.random.categorical)(keys, row_logits)
+
+    return jax.vmap(row)(slot_seed.astype(jnp.int32), pos,
+                         logits).astype(jnp.int32)

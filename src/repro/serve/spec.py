@@ -1,0 +1,155 @@
+"""Speculative decoding for the fused serving loop — draft proposal.
+
+The verify/commit half lives in the model stack
+(``repro.models.transformer.lm_verify_chunk`` / ``lm_commit_chunk``);
+this module owns the *drafting* side and its configuration:
+
+* **Self-speculative n-gram drafting** (the default, no second model):
+  each pool slot carries a device-resident n-gram table — a hash map
+  from the last ``ngram_context`` tokens to the token that followed them
+  last time — seeded from the prompt tail at admission and updated
+  online as tokens commit.  Repetitive continuations (code, templated
+  text, the benchmark's cyclic prompts) hit the table and verify whole
+  blocks per dispatch; misses cost nothing but the wasted verify rows,
+  because emitted tokens are ALWAYS the true sampled tokens from the
+  verify logits — drafts only decide how many of them are valid.
+
+* **Draft-model drafting**: a small decoder-only attention LM shares
+  the slot protocol (same pool slots, same admission prefill, ring
+  rollback via ``slot_pos``) and proposes greedily.  See
+  ``ServeEngine(spec=SpecConfig(draft_model=..., draft_params=...))``.
+
+* ``draft_fn`` — a test hook: the differential conformance suite
+  scripts exact accept/reject patterns by supplying drafts as a pure
+  function of the slot state (position-indexed match/mismatch scripts),
+  driving adversarial paths (accept-all, reject-all, alternating,
+  ring-wrap rollback) deterministically.
+
+Everything here is trace-safe: the static loops are over the (small,
+static) draft length / context length / prompt tail, and the tables are
+ordinary int32 arrays living in the engine's slot state
+(``spec_hist`` / ``spec_ngram`` — see
+``repro.models.slotstate.SLOT_STATE_FIELDS``), so drafting runs inside
+the jitted fused scan with zero host traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Multiplier for the rolling polynomial context hash (int32 wraparound
+# arithmetic — XLA wraps, which is exactly what a hash wants).
+_HASH_MULT = 1000003
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculation knobs for ``ServeEngine(spec=...)``.
+
+    draft_tokens:  drafts proposed per fused step (the verify width is
+                   draft_tokens + 1: one row re-scores the incoming
+                   committed token, the bonus row samples past the last
+                   accepted draft).
+    ngram_context: tokens of context hashed into the per-slot table.
+    ngram_table:   per-slot hash-table entries (int32 each).
+    prompt_tail:   how many prompt-tail tokens seed the table at
+                   admission (static — one compiled admit executable).
+    draft_model:   optional small decoder-only attention Model sharing
+                   the slot protocol; ``draft_params`` its weights.
+    draft_fn:      test hook — ``draft_fn(state) -> (b, draft_tokens)``
+                   int32 drafts computed from the slot state; overrides
+                   both n-gram and draft-model proposal.
+    """
+    draft_tokens: int = 4
+    ngram_context: int = 3
+    ngram_table: int = 512
+    prompt_tail: int = 32
+    draft_model: Any = None
+    draft_params: Any = None
+    draft_fn: Optional[Callable[[dict], jax.Array]] = None
+
+    def __post_init__(self):
+        if self.draft_tokens < 1:
+            raise ValueError("draft_tokens must be >= 1")
+        if self.ngram_context < 1:
+            raise ValueError("ngram_context must be >= 1")
+        if self.ngram_table < 1:
+            raise ValueError("ngram_table must be >= 1")
+        if (self.draft_model is None) != (self.draft_params is None):
+            raise ValueError("draft_model and draft_params go together")
+
+
+def ngram_index(ctx: jax.Array, table_size: int) -> jax.Array:
+    """Hash a context window (..., C) int32 -> table index (...,) int32.
+
+    Rolling polynomial hash in wrapping int32, folded through uint32 for
+    a well-defined non-negative modulo."""
+    h = jnp.zeros(ctx.shape[:-1], jnp.int32)
+    for j in range(ctx.shape[-1]):
+        h = h * jnp.int32(_HASH_MULT) + ctx[..., j]
+    return (h.astype(jnp.uint32)
+            % jnp.uint32(table_size)).astype(jnp.int32)
+
+
+def ngram_draft(hist: jax.Array, table: jax.Array,
+                draft_tokens: int) -> jax.Array:
+    """Propose ``draft_tokens`` greedy n-gram continuations per row.
+
+    hist: (b, C) last committed tokens (-1 where the slot has seen fewer
+    than C); table: (b, T) int32 token-or-(-1) entries.  A table miss
+    falls back to repeating the last context token — any deterministic
+    filler is correct (a wrong draft just truncates acceptance)."""
+    b = hist.shape[0]
+    rows = jnp.arange(b)
+    cur = hist
+    drafts = []
+    for _ in range(draft_tokens):
+        idx = ngram_index(cur, table.shape[-1])
+        tok = table[rows, idx]
+        tok = jnp.where(tok >= 0, tok, jnp.maximum(cur[:, -1], 0))
+        drafts.append(tok)
+        cur = jnp.concatenate([cur[:, 1:], tok[:, None]], axis=1)
+    return jnp.stack(drafts, axis=1)
+
+
+def ngram_update(hist: jax.Array, table: jax.Array, toks: jax.Array,
+                 valid: jax.Array):
+    """Fold ``toks`` (b, s) with ``valid`` (b, s) into the per-slot
+    history + table: each valid token is inserted at the hash of the
+    history *preceding* it (only once the history is fully populated),
+    then shifted into the history.  Static loop over the small block
+    width — runs inside the fused scan."""
+    b, s = toks.shape
+    rows = jnp.arange(b)
+    for j in range(s):
+        tok, ok = toks[:, j], valid[:, j]
+        ins = ok & jnp.all(hist >= 0, axis=1)
+        idx = ngram_index(hist, table.shape[-1])
+        table = table.at[rows, idx].set(
+            jnp.where(ins, tok, table[rows, idx]))
+        hist = jnp.where(
+            ok[:, None],
+            jnp.concatenate([hist[:, 1:], tok[:, None]], axis=1), hist)
+    return hist, table
+
+
+def seed_from_tail(tail: jax.Array, ngram_context: int,
+                   table_size: int):
+    """Admission-time seeding for ONE slot: fold a prompt tail
+    (``prompt_tail``,) int32, left-padded with -1) into a fresh history
+    + table.  Static loop over the fixed tail length — part of the one
+    compiled admit executable."""
+    hist = jnp.full((ngram_context,), -1, jnp.int32)
+    table = jnp.full((table_size,), -1, jnp.int32)
+    for j in range(tail.shape[0]):
+        tok = tail[j]
+        ins = (tok >= 0) & jnp.all(hist >= 0)
+        idx = ngram_index(hist, table_size)
+        table = table.at[idx].set(jnp.where(ins, tok, table[idx]))
+        hist = jnp.where(tok >= 0,
+                         jnp.concatenate([hist[1:], tok[None]]), hist)
+    return hist, table

@@ -151,6 +151,31 @@ def sanitize_sharded():
         assert rep["mesh"] == "2x2", rep
 
 
+def spec_matrix():
+    """Speculative decode (n-gram drafting) on the sharded pool stays
+    bit-identical to the single-device NON-speculative engine — greedy
+    across KV formats, plus a sampled stream (folded keys are position-
+    keyed, so neither the mesh nor the draft/verify dispatch pattern
+    may perturb them)."""
+    from repro.serve import SpecConfig
+
+    cfg, model, params = _build("gptneox-1b")
+    spec = SpecConfig(draft_tokens=3, ngram_table=64)
+    for kv_format in (None, "float8_e4m3fn"):
+        ref = _serve(model, params, None, kv_format=kv_format)
+        for shape in MESHES[1:]:
+            got = _serve(model, params, shape, kv_format=kv_format,
+                         spec=spec)
+            assert got == ref, (
+                f"spec kv={kv_format}: mesh {shape} diverged from "
+                f"single-device non-spec:\n ref={ref}\n got={got}")
+    sampled_kw = dict(temperature=0.8, top_k=8)
+    ref = _serve(model, params, None, **sampled_kw)
+    got = _serve(model, params, (2, 2), spec=spec, **sampled_kw)
+    assert got == ref, (
+        f"sampled spec on 2x2 mesh diverged:\n ref={ref}\n got={got}")
+
+
 def contracts_sharded():
     """jaxpr contracts (packed-upcast, host-callback, cache-width) hold
     for the sharded entry points traced on a real 2x2 mesh."""
@@ -162,7 +187,8 @@ def contracts_sharded():
 
 CASES = {fn.__name__: fn for fn in (
     greedy_attn, greedy_ssm_hybrid, greedy_encdec_vlm,
-    logits_and_prefill, sanitize_sharded, contracts_sharded)}
+    logits_and_prefill, spec_matrix, sanitize_sharded,
+    contracts_sharded)}
 
 
 def main(argv):

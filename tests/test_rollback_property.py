@@ -1,0 +1,238 @@
+"""Property tests for the speculative ring-cache write/rollback pair.
+
+The contract under test (``repro.models.attention.cache_write_rows`` /
+``cache_rollback``): committing per-row position blocks — with rejected
+tails either masked out (the target-cache commit flow) or eagerly
+written and then rolled back (the draft-cache flow) — reproduces the
+cache an oracle builds by writing only the finally-accepted history,
+for every packed KV format, through ring wrap-around, with every
+cross-KV / recurrent / payload leaf outside the rolled-back pointers
+untouched.
+
+"Byte-for-byte" means: ``slot_pos`` arrays exactly equal, and every
+payload byte (packed codes + e8m0 scales) equal wherever ``slot_pos``
+marks a live entry.  Bytes under invalidated (-1) pointers are
+explicitly DON'T-CARE — rollback is a pointer move, not a payload wipe
+(the next write at the slot replaces the bytes; the attention mask
+never reads them) — and the don't-care region is exactly what the
+masked comparison excludes.
+
+Deterministic adversarial scripts (accept-all, reject-all, alternating,
+per-row skew, wrap-around) always run; hypothesis drives randomized
+scripts on top when installed (CI installs it; the container may not).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models import attention as attn
+from repro.serve.faults import _ring_parts
+
+FORMATS = ["float8_e4m3fn", "float6_e2m3fn", "float4_e2m1fn"]
+B, NKV, DH = 2, 2, 8
+T_MAX = 40
+
+_rng = np.random.default_rng(11)
+# the "true" K/V history: a fixed function of (row, position) so the
+# oracle and the speculative path quantize identical inputs
+TRUE_K = _rng.standard_normal((B, T_MAX + 8, NKV, DH)).astype(np.float32)
+TRUE_V = _rng.standard_normal((B, T_MAX + 8, NKV, DH)).astype(np.float32)
+
+
+def _true_kv(positions):
+    """Gather true (k, v) rows for per-row absolute positions (B, s)."""
+    rows = np.arange(B)[:, None]
+    return (jnp.asarray(TRUE_K[rows, positions]),
+            jnp.asarray(TRUE_V[rows, positions]))
+
+
+def _garbage_kv(s, salt):
+    g = np.random.default_rng(1000 + salt)
+    return (jnp.asarray(g.standard_normal((B, s, NKV, DH)), jnp.float32),
+            jnp.asarray(g.standard_normal((B, s, NKV, DH)), jnp.float32))
+
+
+def _oracle(fmt, cap, p_final):
+    """Write ONLY the accepted history 0..p_final[row]-1, in chunks."""
+    cache = attn.init_kv_cache(B, cap, NKV, DH, jnp.bfloat16,
+                               kv_format=fmt)
+    hi = int(p_final.max())
+    for start in range(0, hi, 4):
+        s = min(4, hi - start)
+        positions = np.broadcast_to(np.arange(start, start + s),
+                                    (B, s)).copy()
+        valid = jnp.asarray(positions < p_final[:, None])
+        k, v = _true_kv(positions)
+        cache = attn.cache_write_rows(cache, k, v,
+                                      jnp.asarray(positions), valid,
+                                      kv_format=fmt)
+    return cache
+
+
+def _assert_cache_equal(got, want):
+    sp_g, sp_w = np.asarray(got["slot_pos"]), np.asarray(want["slot_pos"])
+    np.testing.assert_array_equal(sp_g, sp_w)
+    live = sp_w >= 0
+    for leaf in ("k_q", "k_s", "v_q", "v_s"):
+        g, w = np.asarray(got[leaf]), np.asarray(want[leaf])
+        assert (g[live] == w[live]).all(), (
+            f"{leaf} bytes diverge under live slot_pos entries")
+
+
+def _run_script(fmt, cap, script, eager):
+    """Drive one speculative history through the cache primitives.
+
+    script: list of (s, (e_row0, e_row1)) — block width and per-row
+    accepted length.  ``eager=False`` is the target-commit flow (write
+    accepted rows only, via the valid mask); ``eager=True`` is the
+    draft flow (write ALL rows — accepted get true bytes, rejected get
+    garbage — then roll the rejected tail back).  Returns the final
+    cache and per-row final positions.
+    """
+    cache = attn.init_kv_cache(B, cap, NKV, DH, jnp.bfloat16,
+                               kv_format=fmt)
+    p = np.zeros(B, np.int64)
+    for blk, (s, es) in enumerate(script):
+        e = np.minimum(np.minimum(np.asarray(es, np.int64), s),
+                       T_MAX - p)                     # stop at T_MAX
+        positions = p[:, None] + np.arange(s)[None, :]
+        accept = jnp.asarray(np.arange(s)[None, :] < e[:, None])
+        k, v = _true_kv(positions)
+        if eager:
+            gk, gv = _garbage_kv(s, blk)
+            k = jnp.where(np.asarray(accept)[:, :, None, None], k, gk)
+            v = jnp.where(np.asarray(accept)[:, :, None, None], v, gv)
+            cache = attn.cache_write_rows(cache, k, v,
+                                          jnp.asarray(positions),
+                                          kv_format=fmt)
+            cache = attn.cache_rollback(cache, jnp.asarray(positions),
+                                        ~accept)
+        else:
+            cache = attn.cache_write_rows(cache, k, v,
+                                          jnp.asarray(positions), accept,
+                                          kv_format=fmt)
+        p = p + e
+    return cache, p
+
+
+def _check(fmt, cap, script, eager):
+    got, p_final = _run_script(fmt, cap, script, eager)
+    _assert_cache_equal(got, _oracle(fmt, cap, p_final))
+
+
+SCRIPTS = {
+    # every draft verifies: full blocks, clean ring wrap at cap=12
+    "accept_all": [(4, (4, 4))] * 10,
+    # nothing verifies: pure write/rollback churn, no progress
+    "reject_all": [(3, (0, 0))] * 4 + [(4, (4, 4))] * 10,
+    # alternating accept/reject, rows in phase
+    "alternating": [(4, (2, 2)), (3, (0, 0)), (4, (4, 4)),
+                    (2, (1, 1)), (4, (3, 3))] * 4,
+    # rows diverge hard: row 0 races ahead, row 1 crawls then finishes
+    "row_skew": [(4, (4, 1)), (4, (4, 0)), (3, (3, 2)),
+                 (4, (2, 4))] * 6,
+}
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("name", sorted(SCRIPTS))
+@pytest.mark.parametrize("eager", [False, True])
+def test_rollback_scripts(fmt, name, eager):
+    """Commit flow with ring wrap-around (cap < history length), and
+    draft flow on an ample ring (capacity >= history, the draft-cache
+    configuration — eager rejected writes never land on live slots)."""
+    cap = 48 if eager else 12
+    _check(fmt, cap, SCRIPTS[name], eager)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_stale_rollback_is_noop(fmt):
+    """The rollback guard: invalidating a position whose ring slot has
+    since been overwritten by a LATER (wrapped) position — or was never
+    written — must leave the cache bit-identical.  This is what makes
+    rollback safe to issue for inactive rows and for tails that a
+    subsequent commit already replaced."""
+    cap = 12
+    cache, p_final = _run_script(fmt, cap, SCRIPTS["accept_all"], False)
+    before = {k_: np.asarray(v_) for k_, v_ in cache.items()}
+    # positions a full ring-lap behind the live span (the ring holds
+    # the last cap positions), plus positions far beyond anything
+    # written
+    for base in (p_final - 2 * cap, p_final + 5):
+        positions = jnp.asarray(base[:, None] + np.arange(4)[None, :])
+        rolled = attn.cache_rollback(cache, positions,
+                                     jnp.ones((B, 4), bool))
+        for leaf, want in before.items():
+            np.testing.assert_array_equal(np.asarray(rolled[leaf]), want)
+
+
+def test_model_rollback_touches_only_self_attn_pointers():
+    """Model-level rollback (the draft-cache entry point) moves ONLY the
+    self-attention ring ``slot_pos`` pointers: cross-KV rings (never
+    speculatively written), recurrent SSM parts, and every payload leaf
+    stay bit-identical — across an enc-dec stack, a hybrid attn+SSM
+    stack, and a period-stacked sliding-window stack."""
+    for name, kw in (("seamless-m4t-medium", {"enc_len": 16}),
+                     ("jamba-v0.1-52b", {}), ("gemma2-2b", {})):
+        cfg = get_config(name).reduced()
+        model = build_model(cfg)
+        cache = model.init_cache(2, 32, **kw)
+        # seed EVERY ring part (self + cross) with live pointers so a
+        # too-eager rollback would visibly clear them
+        for pname, part, tree in _ring_parts(cache):
+            sp = tree["slot_pos"]
+            live = jnp.broadcast_to(
+                jnp.arange(sp.shape[-1], dtype=jnp.int32), sp.shape)
+            cache[pname][part] = dict(tree, slot_pos=live)
+        positions = jnp.broadcast_to(jnp.arange(3, 7), (2, 4))
+        out = model.rollback_chunk(cache, positions,
+                                   jnp.ones((2, 4), bool))
+        flat_in = jax.tree_util.tree_flatten_with_path(cache)[0]
+        flat_out = jax.tree_util.tree_flatten_with_path(out)[0]
+        rolled = []
+        for (path_i, leaf_i), (path_o, leaf_o) in zip(flat_in, flat_out):
+            assert path_i == path_o
+            key = jax.tree_util.keystr(path_i)
+            if np.array_equal(np.asarray(leaf_i), np.asarray(leaf_o)):
+                continue
+            rolled.append(key)
+            # only a self-attn kv slot_pos may change, and only to -1
+            # at exactly the rolled positions
+            assert "slot_pos" in key and "'kv'" in key, (
+                f"{cfg.name}: rollback modified non-self-attn leaf "
+                f"{key}")
+            got = np.asarray(leaf_o)
+            want = np.asarray(leaf_i).copy()
+            want[..., 3:7] = -1
+            np.testing.assert_array_equal(got, want)
+        assert rolled, f"{cfg.name}: rollback moved no pointers at all"
+
+
+try:
+    import hypothesis
+    from hypothesis import strategies as hyp_st
+except ImportError:                                # pragma: no cover
+    hypothesis = None
+
+if hypothesis is not None:
+    _script_st = hyp_st.lists(
+        hyp_st.tuples(hyp_st.integers(1, 4),
+                      hyp_st.tuples(hyp_st.integers(0, 4),
+                                    hyp_st.integers(0, 4))),
+        min_size=3, max_size=24)
+
+    @hypothesis.settings(max_examples=10, deadline=None, database=None)
+    @hypothesis.given(script=_script_st, fmt=hyp_st.sampled_from(FORMATS),
+                      eager=hyp_st.booleans())
+    def test_rollback_property(script, fmt, eager):
+        """PROPERTY: any accept/reject script, any packed format, both
+        flows — the speculative cache equals the oracle."""
+        _check(fmt, 48 if eager else 12, script, eager)
+else:                                              # pragma: no cover
+    def test_rollback_property():
+        pytest.skip("hypothesis not installed")

@@ -191,6 +191,49 @@ def test_kv_bitflip_is_silent_corruption():
     assert res.tokens[:5] == want[:5]      # prefix (pre-injection) holds
 
 
+def test_spec_kv_bitflip_survivor_isolation():
+    """The silent-corruption gap, on the SPECULATIVE path: a bitflip
+    over one slot's packed KV bytes — including the ring region where
+    drafted-but-rejected rows would land — finishes ``ok`` with a
+    diverged stream, while the surviving slot's stream stays
+    bit-identical to an uninjected speculative run.  Rejected draft
+    rows are never written to the target cache, so the flip has nothing
+    speculative to corrupt beyond what the non-speculative engine
+    already exposes (see repro.serve.faults)."""
+    from repro.serve import SpecConfig
+
+    cfg, model, params = _build("attn")
+    spec = SpecConfig(draft_tokens=3, ngram_table=64)
+
+    def mk():
+        return ServeEngine(model, params, batch=2, max_seq=64,
+                           kv_format="float4_e2m1fn", decode_block=8,
+                           spec=spec)
+
+    pa, pb = [2, 7, 1, 8, 2, 8], [3, 1, 4, 1, 5]
+    oracle = mk()
+    a = oracle.submit(pa, max_new_tokens=12)
+    b = oracle.submit(pb, max_new_tokens=12)
+    want = _by_id(oracle.run())
+
+    eng = mk()
+    a = eng.submit(pa, max_new_tokens=12)
+    b = eng.submit(pb, max_new_tokens=12)
+    eng.decode_loop()                      # admit + first verify block
+    n_clean = len(eng.out_tokens[0])
+    eng.inject_fault(a, "kv_bitflip")
+    res = _by_id(eng.run())
+    assert res[a].status == "ok"           # sentinel cannot see it
+    assert len(res[a].tokens) == 12
+    assert res[a].tokens != want[a].tokens           # silently wrong
+    assert res[a].tokens[:n_clean] == want[a].tokens[:n_clean]
+    # the survivor never notices, token for token
+    assert res[b].status == "ok"
+    assert res[b].tokens == want[b].tokens
+    assert eng.spec_report()["blocks"] > 0 # speculation actually ran
+    assert eng.accounting()["balanced"]
+
+
 def test_cache_faults_require_matching_cache():
     cfg, model, params = _build("attn")
     dense = ServeEngine(model, params, batch=1, max_seq=64,
